@@ -1,0 +1,31 @@
+"""Shared timing utilities for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bench(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (seconds) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def memcpy_bw(nbytes: int) -> float:
+    """Measured contiguous-copy bandwidth (bytes/s) for this volume — the
+    'theoretical link BW' normalizer of the paper's utilization metric."""
+    n = max(1, nbytes // 4)
+    x = jnp.zeros((n,), jnp.float32)
+    f = jax.jit(lambda v: v + 1.0)
+    t = bench(f, x, iters=5)
+    return 2 * n * 4 / t          # read + write

@@ -1,0 +1,132 @@
+"""Paper Table III: KV-cache Prefill/Load on DeepSeek-V3 shapes (S x 512).
+
+  Prefill 1  (2048x512, tiled->MN + RMSNorm): GeMM cluster writes KV tiled;
+             SIMD cluster wants row-major + RMSNorm.
+  Prefill 2  (2048x512, MN->tiled): normed rows stored back GeMM-optimal.
+  Load 1-3   (2048/4096/8192 x 512, transpose in tiled layout).
+
+Baseline ("iDMA + accelerator"): burst copy into an intermediate, separate
+transform pass (materialized), separate norm pass.  XDMA: one fused stream
+with the plugin applied in flight.  Reported: µs per op and the acceleration
+ratio (paper: 2.28-2.60x).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import core as C
+from repro.core import baselines as B
+
+from .common import bench
+
+TILE = C.MNM8N128          # f32 VREG tile (paper uses the GeMM-array tile)
+
+
+def _copy_stage(x):
+    # a real burst copy: barrier-wrapped zero so the add can't fold away
+    zero = lax.optimization_barrier(jnp.zeros((), x.dtype))
+    return x + zero
+
+
+def _two_stage(*fns):
+    """Baseline pipelines are SEPARATE dispatches (copy engine, transform
+    accelerator, SIMD norm) — modeled as separately-jitted stages so the
+    intermediates really materialize (XLA:CPU fuses through
+    optimization_barrier inside one jit)."""
+    jitted = [jax.jit(f) for f in fns]
+
+    def run(x):
+        for f in jitted:
+            x = f(x)
+        return x
+    return run, jitted
+
+
+def _untile_stage(x):
+    return C.MNM8N128.to_logical(x)
+
+
+def _norm_stage(x):
+    return C.RMSNormPlugin()(x)
+
+
+def _tile_stage(x):
+    return C.MNM8N128.from_logical(x)
+
+
+def _transpose_stage(x):
+    return C.xdma_copy(x, C.describe(TILE, TILE, C.Transpose()))
+
+
+_baseline_prefill1 = (_copy_stage, _untile_stage, _norm_stage)
+_baseline_prefill2 = (_copy_stage, _norm_stage, _tile_stage)
+_baseline_load = (_copy_stage, _transpose_stage)
+
+
+def _xdma_prefill1(x):
+    return C.xdma_copy(x, C.describe(TILE, "MN", C.RMSNormPlugin()))
+
+
+def _xdma_prefill2(x):
+    return C.xdma_copy(x, C.describe("MN", TILE, C.RMSNormPlugin()))
+
+
+def _xdma_load(x):
+    return C.xdma_copy(x, C.describe(TILE, TILE, C.Transpose()))
+
+
+CASES = [
+    # paper shapes (S x 512, f32: 4-16 MB — often cache-resident on CPU; the
+    # XL rows exceed LLC so the HBM pass-count difference is visible, which
+    # is the regime the paper's 4 MB-SRAM clusters are in relative to their
+    # working sets)
+    ("prefill1", 2048, _baseline_prefill1, _xdma_prefill1, "tiled"),
+    ("prefill2", 2048, _baseline_prefill2, _xdma_prefill2, "mn"),
+    ("load1", 2048, _baseline_load, _xdma_load, "tiled"),
+    ("load2", 4096, _baseline_load, _xdma_load, "tiled"),
+    ("load3", 8192, _baseline_load, _xdma_load, "tiled"),
+    ("prefill1_xl", 65536, _baseline_prefill1, _xdma_prefill1, "tiled"),
+    ("prefill2_xl", 65536, _baseline_prefill2, _xdma_prefill2, "mn"),
+    ("load_xl", 65536, _baseline_load, _xdma_load, "tiled"),
+]
+
+
+def run(csv=True):
+    rows = []
+    rng = np.random.default_rng(0)
+    from repro.launch import hlo_cost
+    for name, S, base_fns, xdma_fn, src in CASES:
+        logical = jnp.asarray(rng.standard_normal((S, 512)), jnp.float32)
+        x = TILE.from_logical(logical) if src == "tiled" else logical
+        base_run, base_jits = _two_stage(*base_fns)
+        xdma_jit = jax.jit(xdma_fn)
+        bt = bench(base_run, x, iters=5)
+        xt = bench(xdma_jit, x, iters=5)
+        # correctness guard: both paths agree
+        want, got = base_run(x), xdma_jit(x)
+        np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                                   rtol=1e-5, atol=1e-5)
+        # structural check: HBM bytes across all baseline stages vs fused
+        bb = 0.0
+        stage_in = x
+        for j in base_jits:
+            bb += hlo_cost.analyze(j.lower(stage_in).compile().as_text())["bytes"]
+            stage_in = j(stage_in)
+        xb = hlo_cost.analyze(xdma_jit.lower(x).compile().as_text())["bytes"]
+        rows.append((f"tableIII/{name}/baseline", bt * 1e6, 0.0))
+        rows.append((f"tableIII/{name}/xdma", xt * 1e6, bt / xt))
+        rows.append((f"tableIII/{name}/hbm_bytes_ratio", bb / 1e6,
+                     bb / max(xb, 1.0)))
+    if csv:
+        for name, us, ratio in rows:
+            print(f"{name},{us:.1f},{ratio:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

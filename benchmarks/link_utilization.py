@@ -1,0 +1,91 @@
+"""Paper Fig. 4: average link utilization of layout-transforming copies.
+
+Setups (paper numbering):
+  (1) 2D software control loop + 1D DMA    -> core.baselines.sw_loop_1d_dma
+  (2) 2D software control loop + 2D DMA    -> core.baselines.sw_loop_2d_dma
+  (3) 1D DMA copy + layout accelerator     -> core.baselines.copy_then_transform
+  (4,5,6) XDMA with d_buf = 3, 5, 9        -> core.engine.xdma_copy (fused)
+
+Layouts (TPU-adapted tiles, DESIGN.md §2): MN, MNM8N128, MNM16N128, MNM32N128.
+Sizes: 128^2 .. 1024^2 (the paper uses 32^2..512^2 with 8-wide tiles; ours are
+128-wide, so sizes scale with the lane width).
+
+Utilization := min_bytes / (measured_time * memcpy_BW), with memcpy_BW
+measured on this host for the same volume (the CPU stand-in for theoretical
+link bandwidth).  The d_buf sweep additionally reports the *structural*
+quantities the parameter controls on TPU — burst length and VMEM working set —
+since interpret-mode timing cannot see pipeline depth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as C
+from repro.core import baselines as B
+from repro.kernels.relayout import _eff_d_buf
+
+from .common import bench, memcpy_bw
+
+LAYOUTS = ["MNM8N128", "MNM16N128", "MNM32N128"]
+SIZES = [128, 256, 512, 1024]
+
+
+def _copy_stage(x):
+    import jax.numpy as jnp
+    from jax import lax
+    zero = lax.optimization_barrier(jnp.zeros((), x.dtype))
+    return x + zero
+
+
+def _setups(desc):
+    fused = jax.jit(functools.partial(C.xdma_copy, desc=desc))
+    # setup (3) is two separate dispatches: the burst copy engine, then the
+    # layout accelerator (XLA:CPU fuses through optimization_barrier inside
+    # one jit, so one-jit modeling would hide the materialized intermediate)
+    j_copy = jax.jit(_copy_stage)
+    j_xform = jax.jit(functools.partial(C.xdma_copy, desc=desc))
+    copy_xform = lambda x: j_xform(j_copy(x))
+    return [
+        ("sw_loop_1d", jax.jit(functools.partial(B.sw_loop_1d_dma, desc=desc))),
+        ("sw_loop_2d", jax.jit(functools.partial(B.sw_loop_2d_dma, desc=desc))),
+        ("copy+xform", copy_xform),
+        ("xdma", fused),
+    ]
+
+
+def run(csv=True):
+    rows = []
+    rng = np.random.default_rng(0)
+    for size in SIZES:
+        x = jnp.asarray(rng.standard_normal((size, size)), jnp.float32)
+        min_bytes = 2 * x.size * 4
+        bw = memcpy_bw(min_bytes)
+        for lname in LAYOUTS:
+            desc = C.describe("MN", lname)
+            for sname, fn in _setups(desc):
+                if sname == "sw_loop_1d" and size > 1024:
+                    continue  # minutes-long on CPU; trend identical
+                t = bench(fn, x, iters=3)
+                util = min_bytes / (t * bw)
+                rows.append((f"fig4/{lname}/{size}/{sname}", t * 1e6, util))
+    # d_buf structural sweep (TPU pipeline depth; see module docstring).
+    # N=5760 -> 45 tile-columns so depths 3/5/9 all divide exactly.
+    for d_buf in (3, 5, 9):
+        m, n = 512, 5760
+        gm, gn = m // 16, n // 128
+        d = _eff_d_buf(gn, d_buf)
+        vmem = 2 * d * 16 * 128 * 4           # src+dst burst bytes in VMEM
+        bursts = gm * (gn // d)
+        rows.append((f"fig4/dbuf{d_buf}/bursts", float(bursts), vmem))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

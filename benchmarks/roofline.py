@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run sweep (EXPERIMENTS.md §Roofline source).
+
+Reads dryrun_results.jsonl and prints, per (arch x shape x mesh):
+compute/memory/collective terms (s), dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPS ratio, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "dryrun_results.jsonl")
+
+
+def load(path=RESULTS):
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return recs
+
+
+def run(csv=True, path=RESULTS):
+    rows = []
+    for r in load(path):
+        key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if "skipped" in r:
+            if csv:
+                print(f"{key},skip,0.0")
+            continue
+        if "roofline_s" not in r:
+            if csv:
+                print(f"{key},error,0.0")
+            continue
+        t = r["roofline_s"]
+        dom = max(t, key=t.get)
+        step_us = max(t.values()) * 1e6
+        rows.append((key, step_us, r.get("roofline_fraction") or 0.0, dom,
+                     r.get("useful_flop_ratio") or 0.0))
+        if csv:
+            print(f"{key},{step_us:.1f},{r.get('roofline_fraction') or 0:.5f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Benchmark harness entry: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = utilization for Fig.4
+rows, acceleration ratio for Table III rows, roofline fraction for the
+dry-run-derived rows).
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=["fig4", "tableIII", "roofline"],
+                    default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.only in (None, "fig4"):
+        from . import link_utilization
+        link_utilization.run()
+    if args.only in (None, "tableIII"):
+        from . import kv_cache
+        kv_cache.run()
+    if args.only in (None, "roofline"):
+        from . import roofline
+        roofline.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,51 @@
+"""Render the EXPERIMENTS.md roofline table from dryrun_results.jsonl."""
+import json
+import sys
+
+SH_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(v, digits=3):
+    if v is None:
+        return "-"
+    if v == 0:
+        return "0"
+    if v < 1e-3 or v >= 1e4:
+        return f"{v:.2e}"
+    return f"{v:.{digits}g}"
+
+
+def main(path="dryrun_results.jsonl", mesh_filter=None):
+    recs = [json.loads(l) for l in open(path)]
+    rows = {}
+    for r in recs:
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+    meshes = ["16x16", "2x16x16"] if mesh_filter is None else [mesh_filter]
+    print("| arch | shape | mesh | compute s | memory s | collective s | "
+          "bottleneck | MODEL_FLOPS | useful ratio | roofline frac | HBM GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    archs = sorted({a for a, _, _ in rows})
+    for arch in archs:
+        for shape in SH_ORDER:
+            for mesh in meshes:
+                r = rows.get((arch, shape, mesh))
+                if r is None:
+                    continue
+                if "skipped" in r:
+                    print(f"| {arch} | {shape} | {mesh} | — | — | — | "
+                          f"skip: {r['skipped'][:40]} | — | — | — | — |")
+                    continue
+                if "roofline_s" not in r:
+                    print(f"| {arch} | {shape} | {mesh} | ERROR {r.get('error','')[:40]} |")
+                    continue
+                t = r["roofline_s"]
+                peak = (r["bytes_per_device"]["peak"] or 0) / 1e9
+                print(f"| {arch} | {shape} | {mesh} | {fmt(t['compute'])} | "
+                      f"{fmt(t['memory'])} | {fmt(t['collective'])} | "
+                      f"{r['bottleneck']} | {fmt(r['model_flops'],3)} | "
+                      f"{fmt(r['useful_flop_ratio'])} | "
+                      f"{fmt(r.get('roofline_fraction'))} | {peak:.1f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,15 @@
+"""repro.core — XDMA: layout-flexible data movement as a composable JAX module."""
+from .layouts import (  # noqa: F401
+    Layout, MN, MNM8N128, MNM16N128, MNM32N128, MNM8N8,
+    affine_pattern, AffinePattern, layout_for_dtype, by_name,
+)
+from .plugins import (  # noqa: F401
+    Plugin, Identity, Transpose, Cast, Scale, BiasAdd,
+    RMSNormPlugin, Quantize, Dequantize, QTensor, apply_chain,
+)
+from .descriptor import XDMADescriptor, describe  # noqa: F401
+from .engine import xdma_copy, xdma_copy_jit, xdma_copy_pallas, reader, writer  # noqa: F401
+from .remote import (  # noqa: F401
+    xdma_ppermute, xdma_all_to_all, compressed_psum, compressed_psum_with_feedback,
+)
+from . import baselines  # noqa: F401

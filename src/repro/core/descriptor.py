@@ -1,0 +1,61 @@
+"""XDMACfg: the transaction descriptor exchanged in the CFG phase (paper §II-A/B).
+
+In hardware, the Controller converts an offloaded CSR instruction into an
+``XDMACfg`` struct, routes it to the src/dst half-XDMAs, and dispatches tasks
+in order.  In XLA-land, the descriptor is *compile-time* state: it fixes the
+address-generator patterns, the plugin chain, and the buffering depth of the
+lowered program, so the runtime "link" carries only data (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from . import layouts as L
+from . import plugins as P
+
+__all__ = ["XDMADescriptor", "describe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class XDMADescriptor:
+    """One XDMA task: src layout -> [plugins] -> dst layout.
+
+    Attributes mirror the paper's Table II design-time parameters where they
+    survive the port: ``Dim_src/dst`` and ``Ext_src/dst`` come out of
+    :meth:`src_pattern`/:meth:`dst_pattern`; ``d_buf`` is the stream-buffer
+    depth (pipeline/burst depth of the Pallas kernel).
+    """
+
+    src_layout: L.Layout = L.MN
+    dst_layout: L.Layout = L.MN
+    plugins: Tuple[P.Plugin, ...] = ()
+    d_buf: int = 9          # paper sweeps 3/5/9; 9 is their perf config
+    channels: int = 1       # N_C in Table II (parallel stream lanes)
+
+    def out_logical_shape(self, in_logical_shape: Sequence[int]) -> Tuple[int, ...]:
+        return P.chain_out_shape(self.plugins, tuple(in_logical_shape))
+
+    def src_pattern(self, logical_shape: Sequence[int]) -> L.AffinePattern:
+        return L.affine_pattern(self.src_layout, logical_shape)
+
+    def dst_pattern(self, in_logical_shape: Sequence[int]) -> L.AffinePattern:
+        return L.affine_pattern(self.dst_layout, self.out_logical_shape(in_logical_shape))
+
+    def validate(self, in_logical_shape: Sequence[int]) -> None:
+        self.src_layout.check(in_logical_shape)
+        self.dst_layout.check(self.out_logical_shape(in_logical_shape))
+        if self.d_buf < 1:
+            raise ValueError("d_buf must be >= 1")
+
+    def summary(self) -> str:
+        chain = "+".join(p.name for p in self.plugins) or "copy"
+        return f"{self.src_layout.name}->[{chain}]->{self.dst_layout.name} (d_buf={self.d_buf})"
+
+
+def describe(src: str | L.Layout, dst: str | L.Layout,
+             *plugins: P.Plugin, d_buf: int = 9) -> XDMADescriptor:
+    """Convenience constructor: ``describe('MN', 'MNM16N128', Transpose())``."""
+    sl = src if isinstance(src, L.Layout) else L.by_name(src)
+    dl = dst if isinstance(dst, L.Layout) else L.by_name(dst)
+    return XDMADescriptor(src_layout=sl, dst_layout=dl, plugins=tuple(plugins), d_buf=d_buf)

@@ -1,0 +1,178 @@
+"""Layout algebra for XDMA: accelerator-optimal physical layouts of logical matrices.
+
+The paper moves matrices between accelerators whose optimal layouts differ:
+row-major ``MN`` for SIMD engines, tiled ``MNM8N8 / MNM8N16 / MNM8N32`` for
+2D/3D GeMM arrays.  On TPU the native tiles follow the VREG/MXU geometry —
+(8, 128) f32, (16, 128) bf16, (32, 128) int8 — so the tiled family here is
+``MNM{8,16,32}N128`` (see DESIGN.md §2, hardware adaptation).
+
+A :class:`Layout` describes how a *logical* (..., M, N) array is stored
+*physically*.  ``tile=None`` is row-major MN; ``tile=(tm, tn)`` stores the
+array as (..., M//tm, N//tn, tm, tn) — i.e. tile-major with row-major tiles,
+exactly the paper's MNMbNn convention.
+
+:func:`affine_pattern` exports the layout as the N-D affine address-generator
+configuration (bounds + strides) of the XDMA Frontend — the hardware
+structure that Table II of the paper parameterizes with ``Dim`` and the
+``Ext`` list.  The Pallas kernel's BlockSpec index maps and the software-loop
+baselines are both derived from this single source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Layout",
+    "MN",
+    "MNM8N128",
+    "MNM16N128",
+    "MNM32N128",
+    "MNM8N8",
+    "affine_pattern",
+    "AffinePattern",
+    "layout_for_dtype",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Physical layout of a logical (..., M, N) array."""
+
+    tile: Optional[Tuple[int, int]] = None  # None => row-major MN
+    name: str = "MN"
+
+    @property
+    def is_tiled(self) -> bool:
+        return self.tile is not None
+
+    # -- shape algebra -----------------------------------------------------
+    def check(self, logical_shape: Sequence[int]) -> None:
+        if len(logical_shape) < 2:
+            raise ValueError(f"logical shape needs >=2 dims, got {logical_shape}")
+        if self.tile is not None:
+            m, n = logical_shape[-2], logical_shape[-1]
+            tm, tn = self.tile
+            if m % tm or n % tn:
+                raise ValueError(
+                    f"logical ({m},{n}) not divisible by tile {self.tile} for {self.name}"
+                )
+
+    def physical_shape(self, logical_shape: Sequence[int]) -> Tuple[int, ...]:
+        self.check(logical_shape)
+        lead = tuple(logical_shape[:-2])
+        m, n = logical_shape[-2], logical_shape[-1]
+        if self.tile is None:
+            return lead + (m, n)
+        tm, tn = self.tile
+        return lead + (m // tm, n // tn, tm, tn)
+
+    def logical_shape(self, physical_shape: Sequence[int]) -> Tuple[int, ...]:
+        if self.tile is None:
+            return tuple(physical_shape)
+        if len(physical_shape) < 4:
+            raise ValueError(f"tiled physical shape needs >=4 dims: {physical_shape}")
+        lead = tuple(physical_shape[:-4])
+        gm, gn, tm, tn = physical_shape[-4:]
+        if (tm, tn) != self.tile:
+            raise ValueError(f"physical {physical_shape} doesn't end with tile {self.tile}")
+        return lead + (gm * tm, gn * tn)
+
+    # -- conversions (these are what XLA fuses into the stream) ------------
+    def to_logical(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Physical -> logical view (an on-the-fly gather in the stream engine)."""
+        if self.tile is None:
+            return x
+        *lead, gm, gn, tm, tn = x.shape
+        perm = tuple(range(len(lead))) + tuple(
+            len(lead) + p for p in (0, 2, 1, 3)
+        )
+        return x.transpose(perm).reshape(*lead, gm * tm, gn * tn)
+
+    def from_logical(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Logical -> physical view (the pre-writer side of the stream)."""
+        if self.tile is None:
+            return x
+        self.check(x.shape)
+        *lead, m, n = x.shape
+        tm, tn = self.tile
+        y = x.reshape(*lead, m // tm, tm, n // tn, tn)
+        perm = tuple(range(len(lead))) + tuple(len(lead) + p for p in (0, 2, 1, 3))
+        return y.transpose(perm)
+
+    def nbytes(self, logical_shape: Sequence[int], dtype) -> int:
+        return math.prod(logical_shape) * jnp.dtype(dtype).itemsize
+
+
+# Canonical layouts ---------------------------------------------------------
+MN = Layout(None, "MN")
+MNM8N128 = Layout((8, 128), "MNM8N128")    # f32 VREG-native
+MNM16N128 = Layout((16, 128), "MNM16N128")  # bf16 VREG-native
+MNM32N128 = Layout((32, 128), "MNM32N128")  # int8 VREG-native
+MNM8N8 = Layout((8, 8), "MNM8N8")          # the paper's GeMM-array tile (kept for fidelity)
+
+_BY_NAME = {l.name: l for l in (MN, MNM8N128, MNM16N128, MNM32N128, MNM8N8)}
+
+
+def by_name(name: str) -> Layout:
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown layout {name!r}; known: {sorted(_BY_NAME)}") from None
+
+
+def layout_for_dtype(dtype) -> Layout:
+    """MXU/VREG-native tiled layout for a dtype (the 'accelerator-optimal' rule)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return {4: MNM8N128, 2: MNM16N128, 1: MNM32N128}.get(itemsize, MNM8N128)
+
+
+# -- N-D affine address-generator config (paper Table II / Fig 2b) ----------
+@dataclasses.dataclass(frozen=True)
+class AffinePattern:
+    """XDMA Frontend address-generator config: addr = base + sum(idx[d]*stride[d]).
+
+    ``bounds`` is the paper's ``Ext`` list (loop extents, outer->inner);
+    ``strides`` are in elements.  ``dim`` == len(bounds) is Table II's ``Dim``.
+    """
+
+    bounds: Tuple[int, ...]
+    strides: Tuple[int, ...]
+
+    @property
+    def dim(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def num_elements(self) -> int:
+        return math.prod(self.bounds)
+
+    def addresses(self) -> np.ndarray:
+        """Materialize the address stream (testing/small sizes only)."""
+        idx = np.indices(self.bounds).reshape(self.dim, -1)
+        return (np.asarray(self.strides)[:, None] * idx).sum(0)
+
+
+def affine_pattern(layout: Layout, logical_shape: Sequence[int]) -> AffinePattern:
+    """Address pattern that walks a physical buffer in *logical* (row-major) order.
+
+    This is the generator config the XDMA Frontend would be programmed with to
+    stream the array out in logical order, whatever the physical layout.
+    """
+    layout.check(logical_shape)
+    m, n = logical_shape[-2], logical_shape[-1]
+    if layout.tile is None:
+        return AffinePattern(bounds=(m, n), strides=(n, 1))
+    tm, tn = layout.tile
+    gm, gn = m // tm, n // tn
+    # physical buffer (gm, gn, tm, tn) row-major; logical walk order:
+    # for bm in gm: for rm in tm: for bn in gn: for rn in tn
+    s_gn, s_tm, s_tn = gn * tm * tn, tm * tn, tn
+    return AffinePattern(
+        bounds=(gm, tm, gn, tn),
+        strides=(gn * tm * tn, tn, tm * tn, 1),
+    )

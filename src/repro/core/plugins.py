@@ -1,0 +1,179 @@
+"""XDMA Plugins: standardized on-the-fly data manipulation during transfers.
+
+Paper Fig. 2(c): two Plugin Hosts (post-reader, pre-writer) share a uniform
+architecture; one or more plugins can be cascaded, each with its own control
+bits.  Here a :class:`Plugin` is a pure function on the *logical* stream; the
+engine composes the chain between the reader (physical->logical) and the
+writer (logical->physical) so XLA fuses everything into a single pass — the
+data never round-trips HBM between stages, which is the architectural point.
+
+``Quantize``/``Dequantize`` carry scales alongside the payload (a
+:class:`QTensor`), mirroring the paper's "compute-while-transfer" plugin port
+(iDMA Table I) and enabling compressed collectives (see core/remote.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Plugin", "Identity", "Transpose", "Cast", "Scale", "BiasAdd",
+    "RMSNormPlugin", "Quantize", "Dequantize", "QTensor", "apply_chain",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """int8 payload + per-row scales travelling together through the tunnel."""
+
+    values: jnp.ndarray   # int8
+    scales: jnp.ndarray   # f32, shape = values.shape[:-1] + (1,)
+
+    def tree_flatten(self):
+        return (self.values, self.scales), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+class Plugin:
+    """Base: a pure transform on the logical stream."""
+
+    name: str = "plugin"
+
+    def __call__(self, x: Any) -> Any:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def out_logical_shape(self, shape: Tuple[int, ...]) -> Tuple[int, ...]:
+        return tuple(shape)
+
+    def out_dtype(self, dtype):
+        return dtype
+
+    def __repr__(self):
+        return self.name
+
+
+class Identity(Plugin):
+    name = "identity"
+
+    def __call__(self, x):
+        return x
+
+
+class Transpose(Plugin):
+    """Logical transpose of the trailing (M, N) dims — the paper's Load workload."""
+
+    name = "transpose"
+
+    def __call__(self, x):
+        return jnp.swapaxes(x, -1, -2)
+
+    def out_logical_shape(self, shape):
+        return tuple(shape[:-2]) + (shape[-1], shape[-2])
+
+
+@dataclasses.dataclass
+class Cast(Plugin):
+    dtype: Any = jnp.bfloat16
+    name: str = "cast"
+
+    def __call__(self, x):
+        return x.astype(self.dtype)
+
+    def out_dtype(self, dtype):
+        return self.dtype
+
+
+@dataclasses.dataclass
+class Scale(Plugin):
+    alpha: float = 1.0
+    name: str = "scale"
+
+    def __call__(self, x):
+        return x * jnp.asarray(self.alpha, dtype=x.dtype)
+
+
+@dataclasses.dataclass
+class BiasAdd(Plugin):
+    bias: Any = 0.0
+    name: str = "bias_add"
+
+    def __call__(self, x):
+        return x + jnp.asarray(self.bias, dtype=x.dtype)
+
+
+@dataclasses.dataclass
+class RMSNormPlugin(Plugin):
+    """RMSNorm over the last logical dim, on-stream (paper §III-C Prefill).
+
+    ``weight`` optional learned gain; applied in f32 and cast back.
+    """
+
+    eps: float = 1e-6
+    weight: Any = None
+    name: str = "rmsnorm"
+
+    def __call__(self, x):
+        dtype = x.dtype
+        xf = x.astype(jnp.float32)
+        rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + self.eps)
+        y = xf * rms
+        if self.weight is not None:
+            y = y * self.weight.astype(jnp.float32)
+        return y.astype(dtype)
+
+
+@dataclasses.dataclass
+class Quantize(Plugin):
+    """Symmetric per-row int8 quantization on the wire (compression plugin)."""
+
+    name: str = "quantize_int8"
+
+    def __call__(self, x) -> QTensor:
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return QTensor(values=q, scales=scale)
+
+    def out_dtype(self, dtype):
+        return jnp.int8
+
+
+@dataclasses.dataclass
+class Dequantize(Plugin):
+    dtype: Any = jnp.float32
+    name: str = "dequantize_int8"
+
+    def __call__(self, x: QTensor):
+        return (x.values.astype(jnp.float32) * x.scales).astype(self.dtype)
+
+    def out_dtype(self, dtype):
+        return self.dtype
+
+
+def apply_chain(plugins: Sequence[Plugin], x: Any) -> Any:
+    """Cascade plugins (paper: 'one or more plugins can be cascaded')."""
+    for p in plugins:
+        x = p(x)
+    return x
+
+
+def chain_out_shape(plugins: Sequence[Plugin], shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    for p in plugins:
+        shape = p.out_logical_shape(shape)
+    return tuple(shape)

@@ -1,0 +1,67 @@
+"""Deterministic synthetic data pipeline.
+
+Produces a reproducible token stream (a mixture of Zipf-sampled ids and
+learnable n-gram structure so the loss actually falls), shardable by host:
+``SyntheticLM(..., host_id, n_hosts)`` yields only this host's slice, which
+is how a real multi-host input pipeline divides work.  Determinism is keyed
+on (seed, step), so restart-after-failure resumes the stream exactly —
+checkpoint/restart never replays or skips data (fault-tolerance contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+    family: str = "dense"       # vlm/audio add stub-frontend tensors
+    d_model: int = 0
+    encoder_seq: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Batch for a global step (host slice). Pure function of (seed, step)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id]))
+        B, S, V = self.host_batch, self.seq_len, self.vocab
+        # structured stream: next token = (a*prev + b) % V on half the steps
+        base = rng.integers(0, V, size=(B, S + 1), dtype=np.int64)
+        a, b = 31, 17
+        for t in range(1, S + 1):
+            deterministic = (base[:, t - 1] % 2) == 0
+            base[:, t] = np.where(deterministic,
+                                  (a * base[:, t - 1] + b) % V, base[:, t])
+        batch: Dict[str, np.ndarray] = {
+            "tokens": base[:, :-1].astype(np.int32),
+            "labels": base[:, 1:].astype(np.int32),
+        }
+        if self.family == "vlm":
+            batch["embeds"] = rng.standard_normal(
+                (B, S, self.d_model)).astype(np.float32)
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S))
+            batch["positions"] = np.stack([pos, pos, pos])
+            del batch["tokens"]
+        elif self.family == "audio":
+            batch["audio_embeds"] = rng.standard_normal(
+                (B, self.encoder_seq, self.d_model)).astype(np.float32)
+        return batch
+
+
+def make_batch_iterator(ds: SyntheticLM, start_step: int = 0) -> Iterator[Dict]:
+    step = start_step
+    while True:
+        yield ds.batch_at(step)
+        step += 1

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for XDMA hot paths (validated on CPU via interpret=True)."""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Kept deliberately naive and independent of the kernel code paths: reshapes
+and transposes on logical views only.  Tests sweep shapes/dtypes and
+``assert_allclose`` kernels against these.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tile_ref(x: jnp.ndarray, tile_shape: Tuple[int, int]) -> jnp.ndarray:
+    m, n = x.shape
+    tm, tn = tile_shape
+    return x.reshape(m // tm, tm, n // tn, tn).transpose(0, 2, 1, 3)
+
+
+def untile_ref(x: jnp.ndarray) -> jnp.ndarray:
+    gm, gn, tm, tn = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(gm * tm, gn * tn)
+
+
+def tiled_transpose_ref(x: jnp.ndarray) -> jnp.ndarray:
+    gm, gn, tm, tn = x.shape
+    logical = untile_ref(x)
+    return tile_ref(logical.T, (tm, tn))
+
+
+def mn_transpose_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return x.T
+
+
+def rmsnorm_relayout_ref(x: jnp.ndarray, weight, tile_shape: Tuple[int, int],
+                         eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    return tile_ref(y.astype(x.dtype), tile_shape)
+
+
+def quantize_tiled_ref(x: jnp.ndarray, tile_shape: Tuple[int, int]):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return tile_ref(q, tile_shape), scale
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """Naive attention oracle. q (BH,Sq,hd), k/v (BH,Sk,hd)."""
+    import numpy as np
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    if causal:
+        s = jnp.where(kp <= qp, s, -1e30)
+    if window is not None:
+        s = jnp.where(kp > qp - window, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

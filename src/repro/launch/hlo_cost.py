@@ -1,0 +1,357 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scan-based program (stacked layers, gradient accumulation, flash-attention
+chunks) is undercounted by the trip count.  The optimized HLO carries
+``backend_config={"known_trip_count":{"n":...}}`` on while ops, so this
+module re-derives:
+
+  flops             2 * |out| * |contraction| per dot; |out| per elementwise
+  bytes             operands + outputs per op at fusion granularity
+                    (fusion internals never touch HBM)
+  collective bytes  operand bytes per collective kind
+
+all multiplied through the loop nest.  This is the source of the roofline
+terms in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OPNAME = re.compile(r"^(?:\([^=]*?\)|[^\s]+)\s+([a-z][\w\-]*)\(")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_ZERO_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "rng-bit-generator", "copy-start", "copy-done",
+}
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems = nbytes = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+class Op:
+    __slots__ = ("name", "kind", "out_text", "operands", "attrs", "line")
+
+    def __init__(self, name, kind, out_text, operands, attrs, line):
+        self.name, self.kind = name, kind
+        self.out_text, self.operands, self.attrs = out_text, operands, attrs
+        self.line = line
+
+
+class Computation:
+    def __init__(self, name: str, params: Dict[str, str]):
+        self.name = name
+        self.params = params          # param name -> shape text
+        self.ops: List[Op] = []
+        self.table: Dict[str, str] = dict(params)  # op name -> output shape text
+        self.root: Optional[str] = None
+        self.by_name: Dict[str, "Op"] = {}
+
+
+_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+_OPLINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _HEADER.match(line)
+            if m:
+                params = {}
+                for part in re.split(r",\s*(?=[\w.\-%]+:)", m.group(3)):
+                    if ":" in part:
+                        pname, ptype = part.split(":", 1)
+                        params[pname.strip().lstrip("%")] = ptype.strip()
+                cur = Computation(m.group(2), params)
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OPLINE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # output shape prefix: balanced parens for tuples (may contain
+        # /*index=k*/ comments), else token up to first space
+        if rest.startswith("("):
+            depth, j = 0, 0
+            while j < len(rest):
+                if rest[j] == "(":
+                    depth += 1
+                elif rest[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            out_text = rest[:j + 1]
+            tail = rest[j + 1:].lstrip()
+        else:
+            sp = rest.find(" ")
+            out_text = rest[:sp] if sp > 0 else rest
+            tail = rest[sp + 1:].lstrip() if sp > 0 else ""
+        km = re.match(r"([a-z][\w\-]*)\(", tail)
+        kind = km.group(1) if km else "unknown"
+        operands: List[str] = []
+        attrs = ""
+        if km:
+            i = tail.find("(", km.end() - 1)
+            depth, j = 0, i
+            while j < len(tail):
+                if tail[j] == "(":
+                    depth += 1
+                elif tail[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            operands = re.findall(r"%([\w.\-]+)", tail[i + 1:j])
+            attrs = tail[j + 1:]
+        op = Op(name, kind, out_text, operands, attrs, rest)
+        cur.ops.append(op)
+        cur.by_name[name] = op
+        cur.table[name] = out_text
+        if line.lstrip().startswith("ROOT "):
+            cur.root = name
+    return comps, entry
+
+
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems, _ = _shape_elems_bytes(op.out_text)
+    lhs_shape_text = comp.table.get(op.operands[0], "") if op.operands else ""
+    dims = []
+    sm = _SHAPE.search(lhs_shape_text)
+    if sm:
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+    cm = _CONTRACT.search(op.attrs) or _CONTRACT.search(op.line)
+    contract = 1
+    if cm and dims:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+class CostModel:
+    def __init__(self, hlo: str):
+        self.comps, self.entry = parse_module(hlo)
+        self._memo: Dict[Tuple[str, bool], Tuple[float, float, float, Dict[str, float]]] = {}
+        self._free: set = set()
+        self._normalize_converts()
+
+    def _normalize_converts(self):
+        """bf16->f32 upcasts are XLA:CPU artifacts (the TPU MXU consumes bf16
+        with f32 accumulation directly): zero their cost and propagate the
+        narrow operand shape to consumers so dots count bf16 operand bytes."""
+        pure = set()
+        for name, c in self.comps.items():
+            kinds = {op.kind for op in c.ops}
+            if kinds and kinds <= {"convert", "bitcast", "copy"}:
+                pure.add(name)
+        for c in self.comps.values():
+            for op in c.ops:
+                is_conv = op.kind == "convert"
+                if op.kind == "fusion":
+                    m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                    is_conv = bool(m and m.group(1) in pure)
+                if not is_conv or not op.operands:
+                    continue
+                in_text = c.table.get(op.operands[0], "")
+                _, in_b = _shape_elems_bytes(in_text)
+                _, out_b = _shape_elems_bytes(op.out_text)
+                if in_b and in_b < out_b:          # upcast: free on TPU
+                    c.table[op.name] = in_text
+                    self._free.add((c.name, op.name))
+
+    def _effective_root(self, c: Computation) -> Optional[Op]:
+        """Fusion root, looking through convert/bitcast/copy wrappers."""
+        name = c.root
+        for _ in range(6):
+            op = c.by_name.get(name or "")
+            if op is None:
+                return None
+            if op.kind in ("convert", "bitcast", "copy") and op.operands:
+                name = op.operands[0]
+                continue
+            return op
+        return None
+
+    def _called(self, op: Op) -> List[Tuple[str, float]]:
+        """(computation, multiplier) pairs invoked by this op."""
+        out = []
+        trips = 1.0
+        tm = _TRIP.search(op.attrs)
+        if tm:
+            trips = float(tm.group(1))
+        for key in ("body", "condition", "calls", "to_apply"):
+            m = re.search(key + r"=%?([\w.\-]+)", op.attrs)
+            if m and m.group(1) in self.comps:
+                mult = trips if op.kind == "while" else 1.0
+                if key == "to_apply":
+                    continue          # tiny reducers: ignore
+                out.append((m.group(1), mult))
+        # conditionals: branch computations listed in branch_computations={...}
+        m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+        if m:
+            for name in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                if name in self.comps:
+                    out.append((name, 1.0))
+        return out
+
+    def _dus_update_bytes(self, comp: Computation, op: Op) -> Optional[float]:
+        """If op is a DUS (or a fusion rooted in one), bytes really touched:
+        read+write of the updated slice, not the whole aliased buffer."""
+        target = None
+        c = comp
+        if op.kind == "dynamic-update-slice":
+            target = op
+        elif op.kind == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            if m and m.group(1) in self.comps:
+                c = self.comps[m.group(1)]
+                root = self._effective_root(c)
+                if root is not None and root.kind == "dynamic-update-slice":
+                    target = root
+        if target is None or len(target.operands) < 2:
+            return None
+        _, upd = _shape_elems_bytes(c.table.get(target.operands[1], ""))
+        return 2.0 * upd
+
+    _SLICY = ("dynamic-slice", "slice", "gather")
+
+    def _slice_adjust(self, comp: Computation, op: Op,
+                      out_bytes: float, opnd_bytes: float) -> Optional[float]:
+        """Slicing ops read only out-size data, not their whole input buffer."""
+        target = None
+        if op.kind in self._SLICY:
+            target = op
+        elif op.kind == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            if m and m.group(1) in self.comps:
+                c = self.comps[m.group(1)]
+                root = self._effective_root(c)
+                if root is not None and root.kind in self._SLICY:
+                    target = root
+        if target is None:
+            return None
+        largest = 0.0
+        for o in op.operands:
+            _, b = _shape_elems_bytes(comp.table.get(o, ""))
+            largest = max(largest, b)
+        return (opnd_bytes - largest) + 2.0 * out_bytes
+
+    def cost(self, comp_name: str, count_bytes: bool = True):
+        """Returns (mxu_flops, vpu_ops, bytes, {collective: bytes})."""
+        key = (comp_name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps[comp_name]
+        flops = 0.0      # MXU (dot) flops
+        vpu = 0.0        # elementwise/reduce op count
+        nbytes = 0.0
+        coll: Dict[str, float] = {}
+
+        def add_coll(c, mult=1.0):
+            for k, v in c.items():
+                coll[k] = coll.get(k, 0.0) + mult * v
+
+        for op in comp.ops:
+            if op.kind in _ZERO_OPS or (comp.name, op.name) in self._free:
+                continue
+            out_elems, out_bytes = _shape_elems_bytes(op.out_text)
+            opnd_bytes = 0
+            for o in op.operands:
+                _, b = _shape_elems_bytes(comp.table.get(o, ""))
+                opnd_bytes += b
+            called = self._called(op)
+            io_bytes = out_bytes + opnd_bytes
+            if count_bytes:
+                adj = self._dus_update_bytes(comp, op)
+                if adj is None:
+                    adj = self._slice_adjust(comp, op, out_bytes, opnd_bytes)
+                if adj is not None:
+                    io_bytes = adj
+            if op.kind == "dot":
+                flops += _dot_flops(op, comp)
+                if count_bytes:
+                    nbytes += io_bytes
+            elif op.kind == "fusion":
+                f, v, _, c = self.cost(called[0][0], False) if called else (0, 0, 0, {})
+                flops += f
+                vpu += v
+                add_coll(c)
+                if count_bytes:
+                    nbytes += io_bytes
+            elif op.kind == "while":
+                trips = 1.0
+                tm = _TRIP.search(op.attrs)
+                if tm:
+                    trips = float(tm.group(1))
+                for cname, _mult in called:
+                    f, v, b, c = self.cost(cname, count_bytes)
+                    flops += trips * f
+                    vpu += trips * v
+                    nbytes += trips * b
+                    add_coll(c, trips)
+            elif op.kind in ("call", "conditional", "async-start"):
+                for cname, mult in called:
+                    f, v, b, c = self.cost(cname, count_bytes)
+                    flops += mult * f
+                    vpu += mult * v
+                    nbytes += mult * b
+                    add_coll(c, mult)
+            elif op.kind in _COLLECTIVES or any(
+                    op.kind.startswith(c) for c in _COLLECTIVES):
+                base = next(c for c in _COLLECTIVES if op.kind.startswith(c))
+                coll[base] = coll.get(base, 0.0) + opnd_bytes
+                if count_bytes:
+                    nbytes += out_bytes + opnd_bytes
+            else:
+                vpu += out_elems          # elementwise/VPU approximation
+                if count_bytes:
+                    nbytes += io_bytes
+        self._memo[key] = (flops, vpu, nbytes, coll)
+        return self._memo[key]
+
+    def totals(self):
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self.cost(self.entry, True)
+
+
+def analyze(hlo: str):
+    """dict(flops=MXU dot flops, vpu_ops=elementwise ops, bytes=HBM traffic,
+    collectives={kind: bytes}) — per device, trip counts applied."""
+    f, v, b, c = CostModel(hlo).totals()
+    return {"flops": f, "vpu_ops": v, "bytes": b, "collectives": c}

@@ -1,0 +1,30 @@
+"""Token embedding and LM head (vocab sharded over the model axis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain, P
+
+
+def init_embed(key, cfg):
+    ks = jax.random.split(key, 2)
+    p = {"embed": jax.nn.initializers.normal(1.0)(ks[0], (cfg.vocab, cfg.d_model),
+                                                  jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["head"] = jax.nn.initializers.normal(stddev=cfg.d_model ** -0.5)(
+            ks[1], (cfg.d_model, cfg.vocab), jnp.float32)
+    return p
+
+
+def embed(cfg, p, tokens):
+    x = p["embed"].astype(cfg.dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    return constrain(x, P(cfg.axes.batch_spec, None, None))
+
+
+def lm_head(cfg, p, x):
+    w = (p["embed"].T if cfg.tie_embeddings else p["head"]).astype(cfg.dtype)
+    logits = x @ w
+    return constrain(logits, P(cfg.axes.batch_spec, None, cfg.axes.model))

@@ -1,0 +1,163 @@
+"""Selective SSM (Mamba) block in the chunked SSD formulation.
+
+Hardware adaptation (DESIGN.md §2): the CUDA selective-scan kernel does not
+port to TPU; the Mamba-2 SSD chunked form does — intra-chunk work becomes
+(Q x Q) MXU matmuls, inter-chunk state is a tiny sequential carry.  One
+``lax.scan`` over chunks with ``jax.checkpoint`` keeps backward memory at
+one chunk.
+
+Shapes: heads ``Hm`` with head dim ``P`` (d_inner = Hm * P), state size ``N``.
+Per-step decay is scalar-per-head: a_t = exp(-exp(A_log) * dt_t).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import constrain, P as PS
+from .norms import rms_norm
+
+CONV_K = 4
+
+
+def init_mamba(key, cfg):
+    d, di, N, Hm = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    init = jax.nn.initializers.normal(stddev=d ** -0.5)
+    return {
+        "w_z": init(ks[0], (d, di), jnp.float32),
+        "w_x": init(ks[1], (d, di), jnp.float32),
+        "w_B": init(ks[2], (d, N), jnp.float32),
+        "w_C": init(ks[3], (d, N), jnp.float32),
+        "w_dt": init(ks[4], (d, Hm), jnp.float32),
+        "dt_bias": jnp.zeros((Hm,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, Hm).astype(jnp.float32)),
+        "D": jnp.ones((Hm,), jnp.float32),
+        "conv_w": init(ks[5], (CONV_K, di), jnp.float32) * 3.0,
+        "norm": jnp.ones((di,), jnp.float32),
+        "w_out": jax.nn.initializers.normal(stddev=di ** -0.5)(ks[6], (di, d), jnp.float32),
+    }
+
+
+def _causal_conv(xin, w, state=None):
+    """Depthwise causal conv width CONV_K. xin (B,T,di), w (K,di).
+
+    state (B, K-1, di) holds the trailing inputs from the previous segment;
+    returns (y, new_state)."""
+    B, T, di = xin.shape
+    if state is None:
+        state = jnp.zeros((B, CONV_K - 1, di), xin.dtype)
+    xp = jnp.concatenate([state, xin], axis=1)           # (B, T+K-1, di)
+    y = sum(xp[:, k:k + T] * w[k].astype(xin.dtype) for k in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1):]
+    return y, new_state
+
+
+def _ssd_chunk(carry, xs, *, Hm, Pdim, N):
+    """One chunk of the SSD scan.  carry h: (B,Hm,P,N)."""
+    h = carry
+    xc, dtc, Bc, Cc, la = xs        # (B,Q,Hm,P) (B,Q,Hm) (B,Q,N) (B,Q,N) (B,Q,Hm)
+    cum = jnp.cumsum(la, axis=1)                          # (B,Q,Hm)
+    total = cum[:, -1]                                    # (B,Hm)
+    # inter-chunk: y_i += C_i . (exp(cum_i) h_prev)
+    y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", Cc, jnp.exp(cum), h,
+                         preferred_element_type=jnp.float32)
+    # intra-chunk: attention-like masked matmul.  NOTE: mask the EXPONENT,
+    # not the exp — exp() of the unselected (j > i) branch overflows and
+    # poisons gradients through jnp.where (NaN x 0).
+    dot = jnp.einsum("bqn,bkn->bqk", Cc, Bc, preferred_element_type=jnp.float32)
+    Q = xc.shape[1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = cum[:, :, None, :] - cum[:, None, :, :]             # (B,Q,Q,H) i,j
+    decay = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+    scores = dot[..., None] * decay
+    scores = scores * dtc[:, None, :, :]                  # dt_j
+    y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores, xc,
+                         preferred_element_type=jnp.float32)
+    # state to chunk end
+    w_j = jnp.exp(total[:, None, :] - cum) * dtc          # (B,Q,H)
+    h_new = jnp.exp(total)[:, :, None, None] * h + jnp.einsum(
+        "bkh,bkn,bkhp->bhpn", w_j, Bc, xc, preferred_element_type=jnp.float32)
+    return h_new, (y_inter + y_intra)
+
+
+def ssd_scan(x, dt, Bm, Cm, log_a, *, chunk=128, h0=None):
+    """x (B,T,Hm,P) f32; dt,log_a (B,T,Hm); Bm,Cm (B,T,N) -> (y, h_final)."""
+    B, T, Hm, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = max(1, min(chunk, T))
+    while T % Q:
+        Q -= 1
+    nc = T // Q
+    ck = lambda a: a.reshape(B, nc, Q, *a.shape[2:]).swapaxes(0, 1)
+    xs = (ck(x), ck(dt), ck(Bm), ck(Cm), ck(log_a))
+    h = h0 if h0 is not None else jnp.zeros((B, Hm, Pd, N), jnp.float32)
+    step = jax.checkpoint(functools.partial(_ssd_chunk, Hm=Hm, Pdim=Pd, N=N))
+    h, ys = lax.scan(step, h, xs)
+    y = ys.swapaxes(0, 1).reshape(B, T, Hm, Pd)
+    return y, h
+
+
+def ssd_sequential(x, dt, Bm, Cm, log_a, h0=None):
+    """Step-by-step oracle for ssd_scan (tests only)."""
+    B, T, Hm, Pd = x.shape
+    N = Bm.shape[-1]
+    h = h0 if h0 is not None else jnp.zeros((B, Hm, Pd, N), jnp.float32)
+    ys = []
+    for t in range(T):
+        a = jnp.exp(log_a[:, t])                          # (B,Hm)
+        h = a[:, :, None, None] * h + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], x[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t], h))
+    return jnp.stack(ys, axis=1), h
+
+
+def mamba_apply(cfg, p, x, *, cache=None):
+    """x (B,T,d).  cache = {"conv": (B,K-1,di), "h": (B,Hm,P,N)} for decode."""
+    B, T, d = x.shape
+    dt_ = x.dtype
+    di, N, Hm = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    Pd = di // Hm
+
+    z = x @ p["w_z"].astype(dt_)
+    xin = x @ p["w_x"].astype(dt_)
+    xin = constrain(xin, PS(cfg.axes.batch_spec, None, cfg.axes.model))
+    conv_state = cache.get("conv") if cache else None
+    xin, new_conv = _causal_conv(xin, p["conv_w"], conv_state)
+    xin = jax.nn.silu(xin)
+
+    Bm = (x @ p["w_B"].astype(dt_)).astype(jnp.float32)
+    Cm = (x @ p["w_C"].astype(dt_)).astype(jnp.float32)
+    dtv = jax.nn.softplus((x @ p["w_dt"].astype(dt_)).astype(jnp.float32)
+                          + p["dt_bias"])                  # (B,T,Hm)
+    log_a = -jnp.exp(p["A_log"])[None, None] * dtv         # (B,T,Hm) < 0
+
+    xh = xin.astype(jnp.float32).reshape(B, T, Hm, Pd)
+    if cache is None or T > 1:
+        h0 = cache.get("h") if cache else None
+        y, h = ssd_scan(xh, dtv, Bm, Cm, log_a, chunk=min(128, T), h0=h0)
+    else:
+        # single-step decode: h = a h + dt B (x) ; y = C . h
+        h_prev = cache["h"]
+        a = jnp.exp(log_a[:, 0])                           # (B,Hm)
+        contrib = jnp.einsum("bh,bn,bhp->bhpn", dtv[:, 0], Bm[:, 0], xh[:, 0])
+        h = a[:, :, None, None] * h_prev + contrib
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h)[:, None]
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, T, di).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["w_out"].astype(dt_)
+    out = constrain(out, PS(cfg.axes.batch_spec, None, None))
+    new_cache = {"conv": new_conv, "h": h} if cache is not None else None
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, B, dtype=jnp.float32):
+    di, N, Hm = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "conv": jnp.zeros((B, CONV_K - 1, di), dtype),
+        "h": jnp.zeros((B, Hm, di // Hm, N), jnp.float32),
+    }

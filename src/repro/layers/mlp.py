@@ -1,0 +1,44 @@
+"""Feed-forward blocks: SwiGLU (LM family) and GeLU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain, P
+
+
+def init_swiglu(key, d: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    init = jax.nn.initializers.normal(stddev=d ** -0.5)
+    down = jax.nn.initializers.normal(stddev=d_ff ** -0.5)
+    return {
+        "w_gate": init(ks[0], (d, d_ff), jnp.float32),
+        "w_up": init(ks[1], (d, d_ff), jnp.float32),
+        "w_down": down(ks[2], (d_ff, d), jnp.float32),
+    }
+
+
+def swiglu(cfg, p, x):
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    h = constrain(h, P(cfg.axes.batch_spec, None, cfg.axes.model))
+    y = h @ p["w_down"].astype(dt)
+    return constrain(y, P(cfg.axes.batch_spec, None, None))
+
+
+def init_gelu_mlp(key, d: int, d_ff: int):
+    ks = jax.random.split(key, 2)
+    init = jax.nn.initializers.normal(stddev=d ** -0.5)
+    return {
+        "w_up": init(ks[0], (d, d_ff), jnp.float32),
+        "b_up": jnp.zeros((d_ff,), jnp.float32),
+        "w_down": jax.nn.initializers.normal(stddev=d_ff ** -0.5)(ks[1], (d_ff, d), jnp.float32),
+        "b_down": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def gelu_mlp(cfg, p, x):
+    dt = x.dtype
+    h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+    h = constrain(h, P(cfg.axes.batch_spec, None, cfg.axes.model))
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)

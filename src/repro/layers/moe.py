@@ -1,0 +1,219 @@
+"""Mixture-of-Experts with capacity-based top-k routing and explicit
+expert-parallel dispatch through the XDMA remote engine.
+
+Distributed path (``cfg.axes.model`` set + ambient mesh): the MoE sublayer
+runs under ``shard_map``.  Tokens are sequence-split across the model axis;
+each rank routes its slice locally (sort-based, no cross-device scatter),
+builds an (E, C, d) dispatch buffer, and exchanges it with
+:func:`repro.core.xdma_all_to_all` — optionally with Quantize/Dequantize
+plugins on the wire (paper's compute-while-transfer).  Expert FFN runs on the
+local expert shard; the return path mirrors the dispatch; an all-gather
+rebuilds the sequence.  This is exactly the paper's "distributed half-XDMA"
+pattern: the descriptor (routing geometry, capacity, plugin chain) is fixed
+at compile time, the link carries only payload.
+
+Local path (tests / no mesh): same math, no collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import plugins as XP
+from repro.core.remote import xdma_all_to_all
+from repro.sharding import constrain, P
+
+
+def init_moe(key, cfg):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 4)
+    init = jax.nn.initializers.normal(stddev=d ** -0.5)
+    down = jax.nn.initializers.normal(stddev=f ** -0.5)
+    return {
+        "router": init(ks[0], (d, E), jnp.float32),
+        "w_gate": init(ks[1], (E, d, f), jnp.float32),
+        "w_up": init(ks[2], (E, d, f), jnp.float32),
+        "w_down": down(ks[3], (E, f, d), jnp.float32),
+    }
+
+
+def _route(cfg, router_w, tokens):
+    """tokens (T, d) -> (gates (T,k), expert ids (T,k), aux load-balance loss)."""
+    logits = tokens.astype(jnp.float32) @ router_w             # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e f_e * P_e
+    E = cfg.n_experts
+    f_e = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0)
+    f_e = f_e / jnp.maximum(f_e.sum(), 1.0)
+    p_e = probs.mean(0)
+    aux = E * jnp.sum(f_e * p_e)
+    return gates, eidx, aux
+
+
+def _dispatch(cfg, tokens, eidx, gates, capacity):
+    """Sort-based local dispatch. Returns (buffer (E,C,d), slot (T*k,), keep, order)."""
+    T, d = tokens.shape
+    k, E, C = cfg.top_k, cfg.n_experts, capacity
+    flat_e = eidx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    tok_of = order // k
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[se]
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)                # sentinel = dropped
+    contrib = jnp.where(keep[:, None], tokens[tok_of], 0)
+    buf = jnp.zeros((E * C + 1, d), tokens.dtype).at[slot].add(contrib)
+    return buf[:-1].reshape(E, C, d), slot, keep, order, tok_of
+
+
+def _expert_ffn(cfg, p, buf):
+    """buf (E_local, C*, d) -> same shape; SwiGLU per expert."""
+    dt = buf.dtype
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+
+
+def _combine(cfg, out_buf, slot, keep, order, gates, T, d):
+    flat = jnp.concatenate([out_buf.reshape(-1, d),
+                            jnp.zeros((1, d), out_buf.dtype)], 0)
+    vals = flat[jnp.minimum(slot, flat.shape[0] - 1)]
+    w = gates.reshape(-1)[order].astype(vals.dtype)[:, None]
+    y = jnp.zeros((T, d), out_buf.dtype).at[order // cfg.top_k].add(vals * w * keep[:, None])
+    return y
+
+
+def _moe_tokens(cfg, p, tokens, *, model_axis: Optional[str], n_model: int,
+                wire_plugins=()):
+    """Core MoE on a (T, d) token slab; a2a over model_axis when distributed."""
+    T, d = tokens.shape
+    k, E = cfg.top_k, cfg.n_experts
+    gates, eidx, aux = _route(cfg, p["router"], tokens)
+    capacity = int(cfg.capacity_factor * k * T // E) + 1
+    buf, slot, keep, order, tok_of = _dispatch(cfg, tokens, eidx, gates, capacity)
+
+    if model_axis is not None:
+        # (E, C, d) -> (E_local, n_model*C, d): the XDMA dispatch tunnel
+        pre = list(wire_plugins)
+        post = [XP.Dequantize(buf.dtype)] if pre else []
+        buf = xdma_all_to_all(buf, model_axis, split_axis=0, concat_axis=1,
+                              pre=pre, post=post)
+    out = _expert_ffn(cfg, p if model_axis is None else p, buf)
+    if model_axis is not None:
+        pre = list(wire_plugins)
+        post = [XP.Dequantize(out.dtype)] if pre else []
+        out = xdma_all_to_all(out, model_axis, split_axis=1, concat_axis=0,
+                              pre=pre, post=post)
+    y = _combine(cfg, out, slot, keep, order, gates, T, d)
+    return y, aux
+
+
+def _expert_ffn_tp(cfg, p, buf, model_axis):
+    """TP experts: d_ff sharded over the model axis, one psum per layer."""
+    dt = buf.dtype
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+    return lax.psum(out, model_axis)
+
+
+def ep_enabled(cfg, n_model: int) -> bool:
+    return cfg.n_experts % n_model == 0
+
+
+def moe_apply(cfg, p, x, *, mesh=None):
+    """x (B, S, d) -> (y, aux_loss).
+
+    Distributed (cfg.axes.model set + mesh given): runs under shard_map.
+      * EP path (E %% n_model == 0, S %% n_model == 0): sequence-split tokens,
+        XDMA all_to_all dispatch to the expert shard, mirrored return.
+      * TP path (otherwise, incl. decode S=1): tokens replicated over model,
+        expert d_ff sharded, one psum (Megatron-style).
+    Local (tests / no mesh): same math, no collectives.
+    """
+    B, S, d = x.shape
+    axes = cfg.axes
+    if axes.model is None or mesh is None:
+        y, aux = _moe_tokens(cfg, p, x.reshape(-1, d), model_axis=None, n_model=1)
+        return y.reshape(B, S, d), aux
+
+    from jax import shard_map
+
+    n_model = mesh.shape[axes.model]
+    bspec = axes.batch_spec
+    all_axes = tuple(mesh.axis_names)
+    wire = (XP.Quantize(),) if getattr(cfg, "moe_wire_int8", False) else ()
+    use_ep = ep_enabled(cfg, n_model) and S % n_model == 0 and S >= n_model
+
+    def body_ep(xl, router_w, w_gate, w_up, w_down):
+        # xl: (B_local, S, d) replicated over model; split S across model ranks
+        r = lax.axis_index(axes.model)
+        Bl = xl.shape[0]
+        Sl = S // n_model
+        xs = lax.dynamic_slice(xl, (0, r * Sl, 0), (Bl, Sl, d))
+        pl = {"router": router_w, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
+        y, aux = _moe_tokens(cfg, pl, xs.reshape(-1, d),
+                             model_axis=axes.model, n_model=n_model,
+                             wire_plugins=wire)
+        y = lax.all_gather(y.reshape(Bl, Sl, d), axes.model, axis=1, tiled=True)
+        aux = lax.pmean(aux, all_axes)
+        return y, aux
+
+    def body_ep_nosplit(xl, router_w, w_gate, w_up, w_down):
+        # decode-scale EP: too few tokens to seq-split, so every model rank
+        # routes the full local slab (identical dispatch), the a2a moves only
+        # the tiny (E, C, d) token buffer — NEVER the expert weights (a
+        # TP<->EP weight reshard inside the decode loop costs ~60 GB/step).
+        pl = {"router": router_w, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
+        y, aux = _moe_tokens(cfg, pl, xl.reshape(-1, d),
+                             model_axis=axes.model, n_model=n_model,
+                             wire_plugins=wire)
+        aux = lax.pmean(aux, all_axes)
+        return y.reshape(xl.shape), aux
+
+    tp_ok = cfg.d_ff_expert % n_model == 0
+
+    def body_tp(xl, router_w, w_gate, w_up, w_down):
+        pl = {"router": router_w, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
+        tokens = xl.reshape(-1, d)
+        gates, eidx, aux = _route(cfg, router_w, tokens)
+        T = tokens.shape[0]
+        capacity = int(cfg.capacity_factor * cfg.top_k * T // cfg.n_experts) + 1
+        buf, slot, keep, order, _ = _dispatch(cfg, tokens, eidx, gates, capacity)
+        if tp_ok:
+            out = _expert_ffn_tp(cfg, pl, buf, axes.model)
+        else:
+            out = _expert_ffn(cfg, pl, buf)    # replicated experts (fallback)
+        y = _combine(cfg, out, slot, keep, order, gates, T, d)
+        aux = lax.pmean(aux, all_axes)
+        return y.reshape(xl.shape), aux
+
+    if use_ep:
+        body = body_ep
+        wspecs = [P(axes.model, None, None)] * 3
+    elif ep_enabled(cfg, n_model):
+        body = body_ep_nosplit
+        wspecs = [P(axes.model, None, None)] * 3
+    elif tp_ok:
+        body = body_tp
+        wspecs = [P(None, None, axes.model), P(None, None, axes.model),
+                  P(None, axes.model, None)]
+    else:
+        body = body_tp
+        wspecs = [P(), P(), P()]
+    in_specs = (P(bspec, None, None), P(), *wspecs)
+    out_specs = (P(bspec, None, None), P())
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y, aux

@@ -1,0 +1,57 @@
+"""Rotary position embeddings: standard RoPE and M-RoPE (Qwen2-VL).
+
+M-RoPE splits the head dim into (temporal, height, width) sections, each
+rotated by its own position stream; text tokens carry identical t/h/w ids so
+M-RoPE degenerates to RoPE on text (arXiv:2409.12191 §2.1).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def _angles(positions: jnp.ndarray, dim: int, theta: float) -> jnp.ndarray:
+    """positions (...,) -> angles (..., dim//2) in f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x (B, S, H, hd), positions (B, S) -> rotated x (same dtype)."""
+    B, S, H, hd = x.shape
+    ang = _angles(positions, hd, theta)                # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1).astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray,
+                sections: Sequence[int] = (16, 24, 24),
+                theta: float = 10000.0) -> jnp.ndarray:
+    """x (B, S, H, hd), positions (3, B, S); sections are per-axis *pair* counts
+    summing to hd//2 (Qwen2-VL uses (16, 24, 24) for hd=128)."""
+    B, S, H, hd = x.shape
+    assert sum(sections) == hd // 2, (sections, hd)
+    ang_full = _angles(positions[0], hd, theta)        # templates (B,S,hd/2)
+    parts = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        a = _angles(positions[axis], hd, theta)[..., start:start + sec]
+        parts.append(a)
+        start += sec
+    ang = jnp.concatenate(parts, -1)                   # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1).astype(x.dtype)
+
+
+def rope_for(cfg, x, positions):
+    """Dispatch on config: M-RoPE if cfg.mrope and 3-row positions given."""
+    if getattr(cfg, "mrope", False) and positions.ndim == 3:
+        hd = x.shape[-1]
+        t = hd // 2 - 2 * (3 * hd // 16)
+        return apply_mrope(x, positions, (t, 3 * hd // 16, 3 * hd // 16), cfg.rope_theta)
+    if positions.ndim == 3:
+        positions = positions[0]
+    return apply_rope(x, positions, cfg.rope_theta)

@@ -1,0 +1,221 @@
+"""xLSTM blocks: chunked-parallel mLSTM (matrix memory) and recurrent sLSTM.
+
+mLSTM is linear attention with exponential gating and a matrix state
+C in R^{hd x hd}; we use the stabilized chunkwise form (log-space gates,
+running max stabilizer) so training is MXU matmuls per chunk with a tiny
+inter-chunk carry — the TPU-native port of the CUDA kernels (DESIGN.md §2).
+``mlstm_sequential`` is the step oracle used by tests.
+
+sLSTM has recurrent gate weights (h_{t-1} feeds the gates) and is sequential
+by construction; we scan time in checkpointed chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import constrain, P as PS
+from .norms import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    init = jax.nn.initializers.normal(stddev=d ** -0.5)
+    return {
+        "wq": init(ks[0], (d, H * hd), jnp.float32),
+        "wk": init(ks[1], (d, H * hd), jnp.float32),
+        "wv": init(ks[2], (d, H * hd), jnp.float32),
+        "wi": init(ks[3], (d, H), jnp.float32),
+        "wf": init(ks[4], (d, H), jnp.float32),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),   # open forget gates at init
+        "norm": jnp.ones((H * hd,), jnp.float32),
+        "wo": jax.nn.initializers.normal(stddev=(H * hd) ** -0.5)(
+            ks[5], (H * hd, d), jnp.float32),
+    }
+
+
+def _mlstm_chunk(carry, xs):
+    """carry: (C (B,H,hd,hd), n (B,H,hd), m (B,H)); xs: one chunk."""
+    C, n, m = carry
+    q, k, v, li, lf = xs          # q,k,v (B,Q,H,hd); li,lf (B,Q,H)
+    B, Q, H, hd = q.shape
+    F = jnp.cumsum(lf, axis=1)                            # (B,Q,H)
+    b = li - F                                            # (B,Q,H) log i_j - F_j
+    # intra stabilizer: running max of b over j<=i
+    b_run = lax.associative_scan(jnp.maximum, b, axis=1)  # (B,Q,H)
+    m_intra = F + b_run
+    m_inter = F + m[:, None, :]                           # carry stab rides on F_i
+    m_i = jnp.maximum(m_intra, m_inter)                   # (B,Q,H)
+
+    w_inter = jnp.exp(m_inter - m_i)                      # (B,Q,H)
+    num_inter = jnp.einsum("bqhd,bhde->bqhe", q, C) * w_inter[..., None]
+    den_inter = jnp.einsum("bqhd,bhd->bqh", q, n) * w_inter
+
+    logw = F[:, :, None, :] + b[:, None, :, :] - m_i[:, :, None, :]  # (B,Q,Q,H) i,j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask the exponent (not the exp) so the j > i branch can't overflow and
+    # poison gradients through jnp.where
+    w_intra = jnp.exp(jnp.where(mask[None, :, :, None], logw, -1e30))
+    qk = jnp.einsum("bqhd,bjhd->bqjh", q, k)              # (B,Q,Q,H)
+    num_intra = jnp.einsum("bqjh,bjhe->bqhe", w_intra * qk, v)
+    den_intra = jnp.einsum("bqjh->bqh", w_intra * qk)
+
+    num = num_inter + num_intra
+    den = den_inter + den_intra
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+    # state to chunk end
+    Ftot = F[:, -1]                                       # (B,H)
+    b_max = b_run[:, -1]
+    m_new = Ftot + jnp.maximum(m, b_max)
+    wC = jnp.exp(Ftot + m - m_new)                        # (B,H)
+    wj = jnp.exp(Ftot[:, None] + b - m_new[:, None])      # (B,Q,H)
+    C_new = wC[:, :, None, None] * C + jnp.einsum("bjh,bjhd,bjhe->bhde", wj, k, v)
+    n_new = wC[:, :, None] * n + jnp.einsum("bjh,bjhd->bhd", wj, k)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_scan(q, k, v, log_i, log_f, *, chunk=128, state=None):
+    """q,k,v (B,T,H,hd) f32; log_i/log_f (B,T,H).  Returns (h, state)."""
+    B, T, H, hd = q.shape
+    Q = max(1, min(chunk, T))
+    while T % Q:
+        Q -= 1
+    nc = T // Q
+    ck = lambda a: a.reshape(B, nc, Q, *a.shape[2:]).swapaxes(0, 1)
+    if state is None:
+        state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                 jnp.zeros((B, H, hd), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    step = jax.checkpoint(_mlstm_chunk)
+    state, hs = lax.scan(step, state, (ck(q), ck(k), ck(v), ck(log_i), ck(log_f)))
+    return hs.swapaxes(0, 1).reshape(B, T, H, hd), state
+
+
+def mlstm_sequential(q, k, v, log_i, log_f, state=None):
+    """Step oracle (tests)."""
+    B, T, H, hd = q.shape
+    if state is None:
+        C = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n = jnp.zeros((B, H, hd), jnp.float32)
+        m = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C, n, m = state
+    hs = []
+    for t in range(T):
+        m_new = jnp.maximum(log_f[:, t] + m, log_i[:, t])
+        fw = jnp.exp(log_f[:, t] + m - m_new)
+        iw = jnp.exp(log_i[:, t] - m_new)
+        C = fw[:, :, None, None] * C + iw[:, :, None, None] * jnp.einsum(
+            "bhd,bhe->bhde", k[:, t], v[:, t])
+        n = fw[:, :, None] * n + iw[:, :, None] * k[:, t]
+        m = m_new
+        num = jnp.einsum("bhd,bhde->bhe", q[:, t], C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, t], n)), jnp.exp(-m))
+        hs.append(num / den[..., None])
+    return jnp.stack(hs, 1), (C, n, m)
+
+
+def mlstm_apply(cfg, p, x, *, cache=None):
+    B, T, d = x.shape
+    dt_ = x.dtype
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(dt_)).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (x @ p["wk"].astype(dt_)).reshape(B, T, H, hd).astype(jnp.float32) * hd ** -0.5
+    v = (x @ p["wv"].astype(dt_)).reshape(B, T, H, hd).astype(jnp.float32)
+    log_i = (x @ p["wi"].astype(dt_)).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid((x @ p["wf"].astype(dt_)).astype(jnp.float32)
+                               + p["f_bias"])
+    state = cache.get("mlstm") if cache else None
+    if cache is not None and T == 1:
+        h, state = mlstm_sequential(q, k, v, log_i, log_f, state=state)
+    else:
+        h, state = mlstm_scan(q, k, v, log_i, log_f, chunk=min(128, T), state=state)
+    h = rms_norm(h.reshape(B, T, H * hd).astype(dt_), p["norm"])
+    out = h @ p["wo"].astype(dt_)
+    new_cache = {"mlstm": state} if cache is not None else None
+    return constrain(out, PS(cfg.axes.batch_spec, None, None)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 9)
+    init = jax.nn.initializers.normal(stddev=d ** -0.5)
+    rinit = jax.nn.initializers.normal(stddev=hd ** -0.5)
+    p = {"w_out": jax.nn.initializers.normal(stddev=d ** -0.5)(ks[8], (d, d), jnp.float32),
+         "norm": jnp.ones((d,), jnp.float32)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = init(ks[i], (d, H * hd), jnp.float32)
+        p[f"r_{g}"] = rinit(ks[4 + i], (H, hd, hd), jnp.float32)
+        p[f"b_{g}"] = (jnp.full((H * hd,), 3.0, jnp.float32) if g == "f"
+                       else jnp.zeros((H * hd,), jnp.float32))
+    return p
+
+
+def _slstm_step(cfg, p, carry, xw):
+    """carry: (c, n, h, m) each (B,H,hd); xw: pre-projected inputs (B, 4, H*hd)."""
+    c, n, h, m = carry
+    B = c.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    hf = h.reshape(B, H, hd)
+    rec = lambda g: jnp.einsum("bhd,hde->bhe", hf, p[f"r_{g}"]).reshape(B, H * hd)
+    z = jnp.tanh(xw[:, 0] + rec("z"))
+    it = xw[:, 1] + rec("i")
+    ft = xw[:, 2] + rec("f")
+    o = jax.nn.sigmoid(xw[:, 3] + rec("o"))
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    iw = jnp.exp(it - m_new)
+    fw = jnp.exp(lf + m - m_new)
+    c = fw * c + iw * z
+    n = fw * n + iw
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new)
+
+
+def slstm_apply(cfg, p, x, *, cache=None, chunk=64):
+    B, T, d = x.shape
+    dt_ = x.dtype
+    H, hd = cfg.n_heads, cfg.head_dim
+    xw = jnp.stack([
+        (x @ p["w_z"].astype(dt_)) + p["b_z"].astype(dt_),
+        (x @ p["w_i"].astype(dt_)) + p["b_i"].astype(dt_),
+        (x @ p["w_f"].astype(dt_)) + p["b_f"].astype(dt_),
+        (x @ p["w_o"].astype(dt_)) + p["b_o"].astype(dt_),
+    ], axis=2).astype(jnp.float32)                        # (B,T,4,H*hd)
+
+    if cache is not None and "slstm" in cache:
+        carry = cache["slstm"]
+    else:
+        zero = jnp.zeros((B, H * hd), jnp.float32)
+        carry = (zero, zero, zero, jnp.full((B, H * hd), -1e30, jnp.float32))
+
+    step = functools.partial(_slstm_step, cfg, p)
+
+    Q = max(1, min(chunk, T))
+    while T % Q:
+        Q -= 1
+
+    @jax.checkpoint
+    def chunk_fn(carry, xc):                              # xc (Q,B,4,H*hd)
+        def body(cr, xt):
+            cr = step(cr, xt)
+            return cr, cr[2]
+        return lax.scan(body, carry, xc)
+
+    xt = xw.swapaxes(0, 1).reshape(T // Q, Q, B, 4, H * hd)
+    carry, hs = lax.scan(chunk_fn, carry, xt)
+    hs = hs.reshape(T, B, H * hd).swapaxes(0, 1).astype(dt_)
+    y = rms_norm(hs, p["norm"]) @ p["w_out"].astype(dt_)
+    new_cache = {"slstm": carry} if cache is not None else None
+    return constrain(y, PS(cfg.axes.batch_spec, None, None)), new_cache

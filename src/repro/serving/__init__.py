@@ -1,0 +1,2 @@
+from .engine import ServingEngine, make_serve_step  # noqa: F401
+from .transfer import kv_prefill_store, kv_load_transposed, cross_stage_transfer  # noqa: F401

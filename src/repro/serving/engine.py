@@ -1,0 +1,53 @@
+"""Serving engine: batched prefill + greedy decode with donated caches."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+def make_serve_step(cfg: ModelConfig, *, mesh=None):
+    """serve_step(params, cache, tokens) -> (logits, cache).
+
+    This is the function lowered by the dry-run for decode shapes: one new
+    token against the full KV/state cache."""
+
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(cfg, params, tokens, cache, mesh=mesh)
+
+    return serve_step
+
+
+class ServingEngine:
+    """Minimal batched-request serving loop (greedy)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int,
+                 cache_dtype=jnp.bfloat16, mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self._prefill = jax.jit(
+            functools.partial(lm.prefill, cfg, mesh=mesh))
+        self._decode = jax.jit(
+            functools.partial(lm.decode_step, cfg, mesh=mesh),
+            donate_argnums=(2,))
+
+    def generate(self, batch: Dict[str, Any], n_steps: int):
+        """batch: prompt tensors.  Returns (B, n_steps) generated token ids."""
+        lead = batch.get("tokens", batch.get("embeds"))
+        B = lead.shape[0]
+        cache = lm.init_cache(self.cfg, B, self.max_len, self.cache_dtype)
+        logits, cache = self._prefill(self.params, batch, cache)
+        outs = []
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for _ in range(n_steps):
+            outs.append(tok)
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return jnp.concatenate(outs, axis=1)

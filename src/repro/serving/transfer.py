@@ -1,0 +1,57 @@
+"""XDMA KV-cache movement — the paper's §III-C workloads on live caches.
+
+*Prefill store* (paper Prefill 1/2): a GeMM "cluster" produces KV rows; they
+are RMSNormed **while** being relaid into the MXU-optimal tiled layout — one
+fused stream, no intermediate (the RMSNorm plugin sits at the pre-writer
+host).  *Load* (paper Load 1–3): the cache is streamed back transposed for
+the q.K^T access pattern, again one pass.  *Cross-stage transfer*: the cache
+moves from a prefill stage to a decode stage (disaggregated serving) through
+an XDMA virtual tunnel (``ppermute``) with the relayout fused on the wire.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (MN, Layout, RMSNormPlugin, Transpose, describe,
+                        layout_for_dtype, xdma_copy, xdma_ppermute)
+
+
+def _as_matrix(kv: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    """(B, S, KV, hd) -> (B, S, KV*hd) 'KV matrix' exactly as the paper's
+    (seq x d_kv) DeepSeek-V3 shapes (e.g. 8192 x 512)."""
+    B, S, KV, hd = kv.shape
+    return kv.reshape(B, S, KV * hd), (B, S, KV, hd)
+
+
+def kv_prefill_store(kv: jnp.ndarray, *, norm_weight=None, d_buf: int = 9,
+                     eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm-on-stream + tile: (B,S,KV,hd) -> (B, S/tm, d/128, tm, 128)."""
+    mat, _ = _as_matrix(kv)
+    tiled_layout = layout_for_dtype(mat.dtype)
+    desc = describe(MN, tiled_layout,
+                    RMSNormPlugin(eps=eps, weight=norm_weight), d_buf=d_buf)
+    return jax.vmap(lambda m: xdma_copy(m, desc))(mat)
+
+
+def kv_load_transposed(tiled: jnp.ndarray, *, d_buf: int = 9) -> jnp.ndarray:
+    """Stream the tiled cache back as K^T (d_kv, S) matrices, transpose fused."""
+    tm, tn = tiled.shape[-2], tiled.shape[-1]
+    layout = Layout((tm, tn), f"MNM{tm}N{tn}")
+    desc = describe(layout, MN, Transpose(), d_buf=d_buf)
+    return jax.vmap(lambda m: xdma_copy(m, desc))(tiled)
+
+
+def cross_stage_transfer(kv: jnp.ndarray, axis_name: str,
+                         perm: Sequence[Tuple[int, int]], *,
+                         transpose: bool = False, d_buf: int = 9):
+    """Move a cache shard prefill-rank -> decode-rank through one XDMA tunnel,
+    optionally transposing in flight.  Call inside shard_map."""
+    mat, orig = _as_matrix(kv)
+    pre = (Transpose(),) if transpose else ()
+    out = xdma_ppermute(mat, axis_name, list(perm), pre=pre)
+    if transpose:
+        return out                                      # (B, d_kv, S)
+    return out.reshape(orig)

@@ -1,0 +1,108 @@
+"""train_step: microbatched (gradient-accumulation) loss/grad/update.
+
+The global batch is split into ``shape.microbatches`` slices scanned
+sequentially — activation memory scales with the microbatch, gradients
+accumulate in f32.  Optionally the DP gradient all-reduce runs through the
+XDMA compressed collective (int8 wire format) — paper plugin reuse; note
+that under jit/GSPMD the uncompressed psum is implicit in the sharding, so
+compression is exposed on the explicit shard_map trainer path and benched in
+``benchmarks/``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.sharding import constrain, P
+
+
+class TrainState(dict):
+    """{"params", "opt", "step"} — a plain pytree dict."""
+
+
+def init_state(key, cfg: ModelConfig) -> Dict[str, Any]:
+    params = lm.init_params(key, cfg)
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, mesh=None,
+            aux_weight: float = 0.01, z_weight: float = 1e-4):
+    logits, aux = lm.forward(cfg, params, batch, mesh=mesh)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - ll).mean()
+    zloss = (logz ** 2).mean()
+    total = nll + aux_weight * aux + z_weight * zloss
+    return total, {"nll": nll, "aux": aux, "zloss": zloss}
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                    opt_cfg: Optional[AdamWConfig] = None, *, mesh=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    n_micro = max(1, shape.microbatches)
+
+    def constrain_like_params(grads, params):
+        """Keep accumulated grads on the FSDP/TP param sharding so each
+        microbatch's backward emits a reduce-scatter, not an all-reduce."""
+        if mesh is None or not cfg.axes.batch:
+            return grads
+        from repro.launch.mesh import infer_param_specs
+        specs = infer_param_specs(params, cfg.axes, fsdp=True)
+        return jax.tree.map(constrain, grads, specs)
+
+    def split_micro(batch):
+        def sp(x):
+            if x.ndim == 0:
+                return x
+            b_axis = 1 if x.ndim >= 3 and x.shape[0] == 3 else 0   # (3,B,S) mrope
+            B = x.shape[b_axis]
+            assert B % n_micro == 0, (B, n_micro)
+            mb = B // n_micro
+            if b_axis == 0:
+                return x.reshape((n_micro, mb) + x.shape[1:])
+            return jnp.moveaxis(
+                x.reshape(x.shape[0], n_micro, mb, *x.shape[2:]), 1, 0)
+        return jax.tree.map(sp, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        micro = split_micro(batch)
+
+        def micro_step(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, mb, mesh=mesh), has_aux=True)(params)
+            acc_g, acc_l = acc
+            acc_g = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n_micro, acc_g, grads)
+            acc_g = constrain_like_params(acc_g, params)
+            return (acc_g, acc_l + loss / n_micro), metrics
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_g = constrain_like_params(zero_g, params)
+        if n_micro == 1:
+            mb = jax.tree.map(lambda x: x[0] if x.ndim else x, micro)
+            (grads, loss), metrics = micro_step((zero_g, 0.0), mb)
+        else:
+            (grads, loss), metrics = lax.scan(
+                micro_step, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            metrics = jax.tree.map(lambda m: m.mean() if m.ndim else m, metrics)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, state["opt"])
+        state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return state, metrics
+
+    return train_step

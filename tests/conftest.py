@@ -1,0 +1,25 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+def run_multidevice(snippet: str, n_devices: int = 8, timeout: int = 300) -> str:
+    """Run a python snippet in a subprocess with N placeholder CPU devices.
+
+    Multi-device collectives need XLA_FLAGS set before jax init; tests in the
+    main process must keep seeing 1 device (assignment requirement), so the
+    flag lives only in the child environment.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", snippet], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{out.stdout}\n{out.stderr}")
+    return out.stdout

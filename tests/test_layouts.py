@@ -1,0 +1,71 @@
+"""Layout algebra: roundtrips, affine-pattern permutations (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layouts as L
+
+TILES = [(8, 128), (16, 128), (32, 128), (8, 8)]
+
+
+@st.composite
+def tiled_case(draw):
+    tm, tn = draw(st.sampled_from(TILES))
+    gm = draw(st.integers(1, 6))
+    gn = draw(st.integers(1, 4))
+    return tm, tn, gm * tm, gn * tn
+
+
+@given(tiled_case())
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_logical_physical(case):
+    tm, tn, m, n = case
+    lay = L.Layout((tm, tn), "t")
+    x = jnp.arange(m * n, dtype=jnp.float32).reshape(m, n)
+    phys = lay.from_logical(x)
+    assert phys.shape == lay.physical_shape((m, n))
+    back = lay.to_logical(phys)
+    assert jnp.array_equal(back, x)
+    assert lay.logical_shape(phys.shape) == (m, n)
+
+
+@given(tiled_case())
+@settings(max_examples=15, deadline=None)
+def test_affine_pattern_is_permutation(case):
+    tm, tn, m, n = case
+    lay = L.Layout((tm, tn), "t")
+    pat = L.affine_pattern(lay, (m, n))
+    addrs = pat.addresses()
+    assert pat.num_elements == m * n
+    assert sorted(addrs.tolist()) == list(range(m * n))
+
+
+def test_affine_pattern_mn():
+    pat = L.affine_pattern(L.MN, (4, 8))
+    assert pat.bounds == (4, 8) and pat.strides == (8, 1)
+    assert pat.dim == 2
+
+
+def test_affine_pattern_matches_physical_walk():
+    """Address stream in logical order == indices into the flat physical buf."""
+    lay = L.MNM16N128
+    m, n = 32, 256
+    x = np.arange(m * n, dtype=np.int64).reshape(m, n)
+    phys = np.asarray(lay.from_logical(jnp.asarray(x))).reshape(-1)
+    pat = L.affine_pattern(lay, (m, n))
+    walked = phys[pat.addresses()]
+    assert np.array_equal(walked, x.reshape(-1))
+
+
+def test_check_rejects_nondivisible():
+    with pytest.raises(ValueError):
+        L.MNM16N128.check((30, 256))
+    with pytest.raises(ValueError):
+        L.MNM16N128.check((32, 100))
+
+
+def test_layout_for_dtype():
+    assert L.layout_for_dtype(jnp.float32).tile == (8, 128)
+    assert L.layout_for_dtype(jnp.bfloat16).tile == (16, 128)
+    assert L.layout_for_dtype(jnp.int8).tile == (32, 128)

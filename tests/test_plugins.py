@@ -1,0 +1,90 @@
+"""Plugin semantics + engine/baseline agreement (hypothesis where useful)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core as C
+
+
+def rand(shape, seed=0, dtype=jnp.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape), dtype)
+
+
+def test_transpose_plugin():
+    x = rand((32, 256))
+    assert jnp.array_equal(C.Transpose()(x), x.T)
+
+
+def test_rmsnorm_plugin_unit_rms():
+    x = rand((64, 256), 1)
+    y = C.RMSNormPlugin()(x).astype(jnp.float32)
+    rms = jnp.sqrt((y ** 2).mean(-1))
+    assert jnp.allclose(rms, 1.0, atol=1e-3)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_bound(seed):
+    x = rand((16, 128), seed)
+    q = C.Quantize()(x)
+    deq = C.Dequantize()(q)
+    # symmetric int8: error bounded by scale/2 = amax/254 per row
+    amax = jnp.abs(x).max(axis=-1, keepdims=True)
+    assert bool(jnp.all(jnp.abs(deq - x) <= amax / 127.0 + 1e-7))
+
+
+def test_chain_composition():
+    x = rand((32, 256), 2)
+    chain = [C.Scale(2.0), C.BiasAdd(1.0), C.Cast(jnp.bfloat16)]
+    y = C.apply_chain(chain, x)
+    assert y.dtype == jnp.bfloat16
+    ref = (x * 2 + 1).astype(jnp.bfloat16)
+    assert jnp.allclose(y.astype(jnp.float32), ref.astype(jnp.float32))
+
+
+def test_descriptor_validation():
+    d = C.describe("MN", "MNM16N128")
+    d.validate((32, 256))
+    with pytest.raises(ValueError):
+        d.validate((30, 256))
+    assert "MN->" in d.summary()
+
+
+def test_out_logical_shape_through_transpose():
+    d = C.describe("MNM16N128", "MNM16N128", C.Transpose())
+    assert d.out_logical_shape((128, 256)) == (256, 128)
+
+
+@pytest.mark.parametrize("src,dst", [("MN", "MNM16N128"), ("MNM16N128", "MN"),
+                                     ("MN", "MNM8N128"), ("MNM8N128", "MNM16N128")])
+def test_baselines_match_engine(src, dst):
+    x_logical = rand((64, 256), 3)
+    d = C.describe(src, dst)
+    xin = C.by_name(src).from_logical(x_logical)
+    want = C.xdma_copy(xin, d)
+    got1 = C.baselines.sw_loop_1d_dma(xin, d)
+    got2 = C.baselines.sw_loop_2d_dma(xin, d)
+    got3 = C.baselines.copy_then_transform(xin, d)
+    for got in (got1, got2, got3):
+        assert jnp.array_equal(got, want), (src, dst)
+
+
+def test_baselines_match_engine_transpose():
+    x_logical = rand((256, 256), 4)
+    d = C.describe("MNM16N128", "MNM16N128", C.Transpose())
+    xin = C.MNM16N128.from_logical(x_logical)
+    want = C.xdma_copy(xin, d)
+    assert jnp.array_equal(C.baselines.sw_loop_1d_dma(xin, d), want)
+    assert jnp.array_equal(C.baselines.sw_loop_2d_dma(xin, d), want)
+    assert jnp.array_equal(C.baselines.copy_then_transform(xin, d), want)
+
+
+def test_quantized_payload_travels_tiled():
+    x = rand((64, 256), 5)
+    d = C.describe("MN", "MNM32N128", C.Quantize())
+    out = C.xdma_copy(x, d)
+    assert isinstance(out, C.QTensor)
+    assert out.values.dtype == jnp.int8
+    assert out.values.shape == (2, 2, 32, 128)

@@ -1,0 +1,106 @@
+"""Mamba SSD and xLSTM chunked forms vs sequential oracles (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.layers import mamba as M
+from repro.layers import xlstm as X
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+@given(st.integers(0, 100), st.sampled_from([1, 2, 4]), st.sampled_from([8, 12, 16]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunked_matches_sequential(seed, B, T):
+    Hm, Pd, N = 2, 4, 4
+    ks = keys(seed, 5)
+    x = jax.random.normal(ks[0], (B, T, Hm, Pd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, Hm)))
+    Bm = jax.random.normal(ks[2], (B, T, N))
+    Cm = jax.random.normal(ks[3], (B, T, N))
+    log_a = -jnp.exp(jax.random.normal(ks[4], (B, T, Hm)) * 0.5) * dt
+    for chunk in (1, 3, 4, T):
+        y1, h1 = M.ssd_scan(x, dt, Bm, Cm, log_a, chunk=chunk)
+        y2, h2 = M.ssd_sequential(x, dt, Bm, Cm, log_a)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_mlstm_chunked_matches_sequential(seed):
+    B, T, H, hd = 2, 12, 2, 8
+    ks = keys(seed, 5)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd)) * hd ** -0.5
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    log_i = jax.random.normal(ks[3], (B, T, H))
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, T, H)) + 2.0)
+    for chunk in (1, 4, 6, T):
+        h1, s1 = X.mlstm_scan(q, k, v, log_i, log_f, chunk=chunk)
+        h2, s2 = X.mlstm_sequential(q, k, v, log_i, log_f)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(np.asarray(s1[0]), np.asarray(s2[0]),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_mlstm_state_carry_split():
+    """Scanning two halves with carried state == scanning the whole."""
+    B, T, H, hd = 1, 16, 2, 8
+    ks = keys(5, 5)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd)) * hd ** -0.5
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    li = jax.random.normal(ks[3], (B, T, H))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, T, H)) + 2.0)
+    h_full, _ = X.mlstm_scan(q, k, v, li, lf, chunk=4)
+    ha, st_ = X.mlstm_scan(q[:, :8], k[:, :8], v[:, :8], li[:, :8], lf[:, :8], chunk=4)
+    hb, _ = X.mlstm_scan(q[:, 8:], k[:, 8:], v[:, 8:], li[:, 8:], lf[:, 8:],
+                         chunk=4, state=st_)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([ha, hb], 1)),
+                               np.asarray(h_full), rtol=5e-4, atol=5e-4)
+
+
+def test_slstm_shapes_and_decode_consistency():
+    import dataclasses
+    from repro import configs
+    cfg = dataclasses.replace(configs.smoke_config("xlstm-125m"), dtype=jnp.float32)
+    p = X.init_slstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, cfg.d_model), jnp.float32)
+    full, _ = X.slstm_apply(cfg, p, x)
+    assert full.shape == x.shape
+    cache = {"slstm": None}
+    zero = jnp.zeros((2, cfg.n_heads * cfg.head_dim), jnp.float32)
+    cache = {"slstm": (zero, zero, zero, jnp.full_like(zero, -1e30))}
+    outs = []
+    for t in range(10):
+        o, cache = X.slstm_apply(cfg, p, x[:, t:t + 1], cache=cache)
+        outs.append(o)
+    step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_prefill_then_decode_matches_full():
+    import dataclasses
+    from repro import configs
+    cfg = dataclasses.replace(configs.smoke_config("jamba-1.5-large-398b"),
+                              dtype=jnp.float32)
+    p = M.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 14, cfg.d_model), jnp.float32)
+    full, _ = M.mamba_apply(cfg, p, x)
+    cache = M.init_mamba_cache(cfg, 2, jnp.float32)
+    pre, cache = M.mamba_apply(cfg, p, x[:, :10], cache=cache)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :10]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(10, 14):
+        o, cache = M.mamba_apply(cfg, p, x[:, t:t + 1], cache=cache)
+        np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
