@@ -1,0 +1,68 @@
+"""CFG-cache benchmark: the cost of re-running the CFG phase per call.
+
+The paper's Controller receives one CSR instruction and reuses the resulting
+``XDMACfg`` for every task dispatch; our analogue is the per-descriptor jit
+cache in ``repro.core.api``.  This benchmark measures the Data-phase call
+rate through the cache against a worst-case caller that rebuilds the
+descriptor *and* the jitted executable on every call (per-call retracing).
+
+Rows: ``cfgcache_<case>_{cached,retrace},us_per_call,speedup`` — ``derived``
+on the cached row is retrace_time / cached_time (how much the single CFG
+phase buys).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as C
+from repro.core import xdma
+
+from .common import bench
+
+CASES = [
+    ("copy_tile", lambda: C.describe("MN", "MNM8N128")),
+    ("rmsnorm_tile", lambda: C.describe("MN", "MNM8N128", C.RMSNormPlugin())),
+    ("load_transpose", lambda: C.describe("MNM8N128", "MN", C.Transpose())),
+]
+SHAPE = (512, 512)
+
+
+def _time_per_call(fn, x, iters: int = 20) -> float:
+    jax.block_until_ready(fn(x))                  # first call pays the CFG
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(x))
+    return (time.perf_counter() - t0) / iters
+
+
+def _time_retrace(make_desc, x, iters: int = 5) -> float:
+    """Fresh descriptor + fresh jit per call = CFG phase every time."""
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        desc = make_desc()
+        jax.block_until_ready(jax.jit(lambda v: C.xdma_copy(v, desc))(x))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for name, make_desc in CASES:
+        desc = make_desc()
+        x = jnp.asarray(rng.standard_normal(SHAPE), jnp.float32)
+        if desc.src.layout.is_tiled:
+            x = desc.src.layout.from_logical(x)
+        cached = _time_per_call(lambda v: xdma.transfer(v, desc), x)
+        retrace = _time_retrace(make_desc, x)
+        print(f"cfgcache_{name}_cached,{cached * 1e6:.1f},{retrace / cached:.1f}")
+        print(f"cfgcache_{name}_retrace,{retrace * 1e6:.1f},1.0")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

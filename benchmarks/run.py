@@ -11,7 +11,8 @@ import argparse
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["fig4", "tableIII", "roofline"],
+    ap.add_argument("--only", choices=["fig4", "tableIII", "roofline",
+                                       "cfgcache"],
                     default=None)
     args = ap.parse_args()
     print("name,us_per_call,derived")
@@ -21,6 +22,9 @@ def main() -> None:
     if args.only in (None, "tableIII"):
         from . import kv_cache
         kv_cache.run()
+    if args.only in (None, "cfgcache"):
+        from . import cfg_cache
+        cfg_cache.run()
     if args.only in (None, "roofline"):
         from . import roofline
         roofline.run()

@@ -1,4 +1,4 @@
-"""Quickstart: the XDMA core in five moves.
+"""Quickstart: the XDMA core in seven moves.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core as C
+from repro.core import xdma
 
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((256, 512)), jnp.float32)
@@ -31,3 +32,18 @@ print("pallas==ref:", bool(jnp.array_equal(
 # 5. load it back transposed (the paper's KV-cache Load workload)
 back = C.xdma_copy(tiled, C.describe("MNM8N128", "MN", C.Transpose()))
 print("loaded K^T shape:", back.shape)
+
+# 6. the unified entry point: every movement kind through one call, with the
+#    CFG phase (trace + compile) cached per descriptor
+y = xdma.transfer(x, desc)                       # same task, cached lowering
+y = xdma.transfer(x, desc)                       # pure Data phase: cache hit
+print("transfer parity:", bool(jnp.array_equal(y, tiled)), "|",
+      xdma.cache_stats())
+
+# 7. the Controller's in-order task queue: store+load as ONE fused program
+queue = C.XDMAQueue([C.describe("MN", "MNM8N128", C.RMSNormPlugin()),
+                     C.describe("MNM8N128", "MN", C.Transpose())],
+                    name="kv_roundtrip")
+print(queue.summary())
+print("queue out:", queue.run(x).shape,
+      "dtype contract:", queue.out_dtype(jnp.float32).__name__)

@@ -7,9 +7,11 @@ from .plugins import (  # noqa: F401
     Plugin, Identity, Transpose, Cast, Scale, BiasAdd,
     RMSNormPlugin, Quantize, Dequantize, QTensor, apply_chain,
 )
-from .descriptor import XDMADescriptor, describe  # noqa: F401
+from .descriptor import Endpoint, XDMADescriptor, describe  # noqa: F401
 from .engine import xdma_copy, xdma_copy_jit, xdma_copy_pallas, reader, writer  # noqa: F401
 from .remote import (  # noqa: F401
     xdma_ppermute, xdma_all_to_all, compressed_psum, compressed_psum_with_feedback,
 )
+from .api import XDMAQueue, transfer, cache_stats, clear_cache  # noqa: F401
+from . import api as xdma  # noqa: F401  (usage: from repro.core import xdma)
 from . import baselines  # noqa: F401

@@ -1,0 +1,241 @@
+"""xdma.transfer(): the single entry point for every XDMA data movement.
+
+Paper §II-B: software offloads one CSR instruction; the Controller turns it
+into an ``XDMACfg``, routes it to the right half-XDMAs, and dispatches tasks
+in order.  This module is that Controller.  :func:`transfer` consumes a
+:class:`~repro.core.descriptor.XDMADescriptor` and dispatches — *from the
+descriptor alone* — to one of the lowering backends:
+
+* local + backend auto/fused  -> ``engine.xdma_copy``   (fused XLA stream)
+* local + backend pallas      -> ``engine.xdma_copy_pallas`` (TPU kernel)
+* dst peer                    -> ``remote.xdma_ppermute``    (tunnel)
+* dst all_to_all              -> ``remote.xdma_all_to_all``  (MoE dispatch)
+* dst reduce                  -> ``remote.compressed_psum`` / ``lax.psum``
+
+The CFG phase happens **once per descriptor**: the lowered callable is built
+and (for local movements) jitted on first use, then cached by descriptor
+identity.  Every later ``transfer`` with the same descriptor is a pure Data
+phase — no retracing, no recompilation (see :func:`cache_stats`, which makes
+the property testable, and the ``cfgcache`` benchmark, which measures it).
+
+:class:`XDMAQueue` is the Controller's in-order task queue (paper §II-B):
+a sequence of descriptors lowered as one fused, ordered program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import engine
+from . import plugins as P
+from . import remote
+from .descriptor import Endpoint, XDMADescriptor
+
+__all__ = ["transfer", "XDMAQueue", "cache_stats", "clear_cache"]
+
+
+# -- the CFG cache: descriptor -> lowered callable ---------------------------
+@dataclasses.dataclass
+class _CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def size(self):
+        return len(_CACHE)
+
+
+# key -> (descriptor kept alive so id-keys stay unique, lowered callable)
+_CACHE: Dict[Any, Tuple[XDMADescriptor, Callable]] = {}
+_STATS = _CacheStats()
+
+
+def cache_stats() -> _CacheStats:
+    """Hit/miss counters for the per-descriptor CFG cache."""
+    return _STATS
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _STATS.hits = 0
+    _STATS.misses = 0
+
+
+def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
+    """Build the Data-phase callable for a descriptor (the CFG phase)."""
+    movement = desc.movement
+    if movement == "local":
+        if desc.backend == "pallas":
+            def run(x):
+                return engine.xdma_copy_pallas(x, desc, interpret=interpret)
+            return run
+        # fused path: jit here so repeated transfers share one executable
+        return jax.jit(lambda x: engine.xdma_copy(x, desc))
+
+    # Remote movements run inside the caller's shard_map/jit: lower to a
+    # plain callable (reader -> pre host -> link -> post host -> writer).
+    ep = desc.remote
+
+    def run_remote(x):
+        logical = engine.reader(x, desc.src.layout)
+        if logical.ndim >= 2:       # reduce accepts flat payloads (psum-like)
+            desc.validate(logical.shape)
+        if movement == "peer":
+            y = remote.xdma_ppermute(logical, ep.axis, list(ep.perm),
+                                     pre=desc.pre, post=desc.post)
+        elif movement == "all_to_all":
+            y = remote.xdma_all_to_all(logical, ep.axis,
+                                       split_axis=ep.split_axis,
+                                       concat_axis=ep.concat_axis,
+                                       pre=desc.pre, post=desc.post)
+        elif movement == "reduce":
+            # A Quantize/Dequantize pair around the link is the wire codec:
+            # compressed_psum owns it (its two-phase decomposition re-quantizes
+            # internally).  Any other pre/post plugins run as normal hosts.
+            pre_rest = tuple(p for p in desc.pre if not isinstance(p, P.Quantize))
+            post_rest = tuple(p for p in desc.post if not isinstance(p, P.Dequantize))
+            codec = len(pre_rest) != len(desc.pre)
+            y = P.apply_chain(pre_rest, logical)
+            if codec:
+                deq = [p for p in desc.post if isinstance(p, P.Dequantize)]
+                out_dtype = deq[0].dtype if deq else y.dtype
+                y = remote.compressed_psum(y, ep.axis, ep.axis_size,
+                                           out_dtype=out_dtype)
+            else:
+                y = lax.psum(y, ep.axis)
+            y = P.apply_chain(post_rest, y)
+        else:  # pragma: no cover - movement is validated by the descriptor
+            raise ValueError(f"unknown movement {movement!r}")
+        if isinstance(y, P.QTensor):
+            return P.QTensor(values=engine.writer(y.values, desc.dst.layout),
+                             scales=y.scales)
+        return engine.writer(y, desc.dst.layout)
+
+    return run_remote
+
+
+def _lowered(desc: XDMADescriptor, interpret: bool) -> Callable:
+    key = (desc.cache_key(), bool(interpret))
+    entry = _CACHE.get(key)
+    if entry is not None:
+        _STATS.hits += 1
+        return entry[1]
+    _STATS.misses += 1
+    fn = _lower(desc, interpret)
+    _CACHE[key] = (desc, fn)
+    return fn
+
+
+def transfer(x: jnp.ndarray, desc: XDMADescriptor, *,
+             interpret: bool = True) -> Any:
+    """Execute one XDMA task described entirely by ``desc``.
+
+    ``x`` is the physical buffer at the src endpoint; the return value is the
+    physical buffer at the dst endpoint (a :class:`~repro.core.plugins.QTensor`
+    when the surviving chain ends in ``Quantize``).  Remote movements must be
+    called inside ``shard_map`` (or jit with sharded inputs), exactly like
+    the backend functions they lower to.  ``interpret`` only affects the
+    Pallas backend (kernels run in interpret mode off-TPU).
+    """
+    return _lowered(desc, interpret)(x)
+
+
+# -- the Controller's in-order task queue (paper §II-B) ----------------------
+class XDMAQueue:
+    """An ordered sequence of XDMA tasks lowered as one program.
+
+    ``run(x)`` chains every task in submission order — for all-local queues
+    the whole chain is jitted as a *single* fused executable (one CFG phase
+    for the queue), mirroring the Controller popping its task FIFO in order.
+    ``run_task(x, i)`` executes one task through the same cache, for call
+    sites that interleave compute between tasks (e.g. MoE dispatch -> expert
+    FFN -> MoE return).
+    """
+
+    def __init__(self, descriptors: Sequence[XDMADescriptor] = (),
+                 name: str = "queue"):
+        self.name = name
+        self._descs: List[XDMADescriptor] = []
+        self._fused: Dict[bool, Callable] = {}          # keyed by interpret
+        self._tasks: Dict[Tuple[int, bool], Callable] = {}
+        for d in descriptors:
+            self.submit(d)
+
+    def submit(self, desc: XDMADescriptor) -> int:
+        """Append a task; returns its index in dispatch order."""
+        if not isinstance(desc, XDMADescriptor):
+            raise TypeError(f"XDMAQueue.submit takes a descriptor, got {type(desc)}")
+        self._descs.append(desc)
+        self._fused.clear()             # new CFG phase needed for the chain
+        return len(self._descs) - 1
+
+    @property
+    def descriptors(self) -> Tuple[XDMADescriptor, ...]:
+        return tuple(self._descs)
+
+    def __len__(self) -> int:
+        return len(self._descs)
+
+    def __iter__(self):
+        return iter(self._descs)
+
+    @property
+    def is_local(self) -> bool:
+        return all(not d.is_remote for d in self._descs)
+
+    # -- compile-time contracts ---------------------------------------------
+    def out_logical_shape(self, in_logical_shape: Sequence[int]) -> Tuple[int, ...]:
+        shape = tuple(in_logical_shape)
+        for d in self._descs:
+            shape = d.out_logical_shape(shape)
+        return shape
+
+    def out_dtype(self, in_dtype):
+        dtype = in_dtype
+        for d in self._descs:
+            dtype = d.out_dtype(dtype)
+        return dtype
+
+    # -- execution ----------------------------------------------------------
+    def _task(self, i: int, interpret: bool) -> Callable:
+        # Queue-local memo (not the global CFG cache): queues are routinely
+        # rebuilt per trace inside shard_map bodies, and id-keyed global
+        # entries would accumulate; the queue's own lifetime bounds these.
+        fn = self._tasks.get((i, interpret))
+        if fn is None:
+            fn = _lower(self._descs[i], interpret)
+            self._tasks[(i, interpret)] = fn
+        return fn
+
+    def run_task(self, x, i: int, *, interpret: bool = True):
+        """Dispatch task ``i`` alone (in-order use is the caller's contract)."""
+        return self._task(i, interpret)(x)
+
+    def run(self, x, *, interpret: bool = True):
+        """Dispatch the whole queue in order as one fused program."""
+        if not self._descs:
+            return x
+        fused = self._fused.get(interpret)
+        if fused is None:
+            descs = tuple(self._descs)
+
+            def chain(v):
+                for i, d in enumerate(descs):
+                    if d.movement == "local" and d.backend != "pallas":
+                        v = engine.xdma_copy(v, d)     # fuse into the chain
+                    else:
+                        v = self._task(i, interpret)(v)
+                return v
+
+            fused = jax.jit(chain) if self.is_local else chain
+            self._fused[interpret] = fused
+        return fused(x)
+
+    def summary(self) -> str:
+        lines = [f"XDMAQueue({self.name!r}, {len(self)} tasks)"]
+        lines += [f"  [{i}] {d.summary()}" for i, d in enumerate(self._descs)]
+        return "\n".join(lines)

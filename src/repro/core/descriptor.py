@@ -5,57 +5,271 @@ In hardware, the Controller converts an offloaded CSR instruction into an
 in order.  In XLA-land, the descriptor is *compile-time* state: it fixes the
 address-generator patterns, the plugin chain, and the buffering depth of the
 lowered program, so the runtime "link" carries only data (DESIGN.md §2).
+
+Since the endpoint redesign (DESIGN.md §3) a descriptor names both *ends* of
+the movement explicitly: an :class:`Endpoint` is either a local memory with a
+physical :class:`~repro.core.layouts.Layout`, or a mesh-axis remote (peer
+permutation, all-to-all, reduction).  Plugins are split between the two
+plugin hosts of paper Fig. 2(c): ``pre`` runs at the src half-XDMA's
+pre-writer host (before the link), ``post`` at the dst half-XDMA's
+post-reader host (after the link).  The legacy ``plugins=`` spelling is kept
+as a back-compat shim and lands on the pre host.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 from . import layouts as L
 from . import plugins as P
 
-__all__ = ["XDMADescriptor", "describe"]
+__all__ = ["Endpoint", "XDMADescriptor", "describe"]
+
+_LOCAL = "local"
+_PEER = "peer"
+_ALL_TO_ALL = "all_to_all"
+_REDUCE = "reduce"
+_REMOTE_KINDS = (_PEER, _ALL_TO_ALL, _REDUCE)
+_KINDS = (_LOCAL,) + _REMOTE_KINDS
+
+
+@dataclasses.dataclass(frozen=True)
+class Endpoint:
+    """One side of an XDMA movement.
+
+    ``kind`` selects the transport role:
+
+    * ``local``       — a memory in this shard's address space; ``layout`` is
+      its physical layout (the half-XDMA Frontend config).
+    * ``peer``        — the far side of a point-to-point tunnel over mesh axis
+      ``axis`` with device permutation ``perm``.
+    * ``all_to_all``  — the MoE-dispatch exchange over ``axis``
+      (``split_axis``/``concat_axis`` as in ``lax.all_to_all``).
+    * ``reduce``      — an all-reduce rendezvous over ``axis`` with
+      ``axis_size`` participants.
+
+    Remote endpoints still carry a ``layout``: it is the physical layout of
+    the buffer at that end, applied by that side's Frontend reader/writer.
+    """
+
+    kind: str = _LOCAL
+    layout: L.Layout = L.MN
+    axis: Optional[str] = None
+    perm: Optional[Tuple[Tuple[int, int], ...]] = None
+    split_axis: int = 0
+    concat_axis: int = 0
+    axis_size: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown endpoint kind {self.kind!r}; one of {_KINDS}")
+        if self.is_remote and self.axis is None:
+            raise ValueError(f"{self.kind!r} endpoint needs a mesh axis name")
+        if self.kind == _PEER and self.perm is None:
+            raise ValueError("peer endpoint needs a device permutation")
+        if self.kind == _REDUCE and self.axis_size is None:
+            raise ValueError("reduce endpoint needs axis_size")
+
+    @property
+    def is_remote(self) -> bool:
+        return self.kind in _REMOTE_KINDS
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def local(cls, layout: str | L.Layout = L.MN) -> "Endpoint":
+        return cls(kind=_LOCAL, layout=_as_layout(layout))
+
+    @classmethod
+    def peer(cls, axis: str, perm: Sequence[Tuple[int, int]],
+             layout: str | L.Layout = L.MN) -> "Endpoint":
+        return cls(kind=_PEER, layout=_as_layout(layout), axis=axis,
+                   perm=tuple((int(a), int(b)) for a, b in perm))
+
+    @classmethod
+    def all_to_all(cls, axis: str, split_axis: int = 0, concat_axis: int = 0,
+                   layout: str | L.Layout = L.MN) -> "Endpoint":
+        return cls(kind=_ALL_TO_ALL, layout=_as_layout(layout), axis=axis,
+                   split_axis=split_axis, concat_axis=concat_axis)
+
+    @classmethod
+    def reduce(cls, axis: str, axis_size: int,
+               layout: str | L.Layout = L.MN) -> "Endpoint":
+        return cls(kind=_REDUCE, layout=_as_layout(layout), axis=axis,
+                   axis_size=axis_size)
+
+    def summary(self) -> str:
+        if self.kind == _LOCAL:
+            return self.layout.name
+        return f"{self.kind}({self.axis})@{self.layout.name}"
+
+
+def _as_layout(layout: str | L.Layout) -> L.Layout:
+    return layout if isinstance(layout, L.Layout) else L.by_name(layout)
 
 
 @dataclasses.dataclass(frozen=True)
 class XDMADescriptor:
-    """One XDMA task: src layout -> [plugins] -> dst layout.
+    """One XDMA task: src endpoint -> [pre | link | post] -> dst endpoint.
 
     Attributes mirror the paper's Table II design-time parameters where they
     survive the port: ``Dim_src/dst`` and ``Ext_src/dst`` come out of
     :meth:`src_pattern`/:meth:`dst_pattern`; ``d_buf`` is the stream-buffer
-    depth (pipeline/burst depth of the Pallas kernel).
+    depth (pipeline/burst depth of the Pallas kernel); ``channels`` is N_C,
+    the number of parallel stream lanes (see :meth:`src_patterns`).
+
+    Back-compat: the legacy spelling ``XDMADescriptor(src_layout=..,
+    dst_layout=.., plugins=..)`` still works — layouts are wrapped into local
+    :class:`Endpoint`\\ s and ``plugins`` lands on the ``pre`` host.  The
+    ``plugins`` attribute is always normalized to ``pre + post`` (the full
+    on-stream cascade), which is what the local engine fuses.
     """
 
-    src_layout: L.Layout = L.MN
-    dst_layout: L.Layout = L.MN
-    plugins: Tuple[P.Plugin, ...] = ()
+    src_layout: Optional[L.Layout] = None    # legacy; folded into .src
+    dst_layout: Optional[L.Layout] = None    # legacy; folded into .dst
+    plugins: Tuple[P.Plugin, ...] = ()       # normalized to pre + post
     d_buf: int = 9          # paper sweeps 3/5/9; 9 is their perf config
     channels: int = 1       # N_C in Table II (parallel stream lanes)
+    src: Optional[Endpoint] = None
+    dst: Optional[Endpoint] = None
+    pre: Tuple[P.Plugin, ...] = ()           # src-side pre-writer host
+    post: Tuple[P.Plugin, ...] = ()          # dst-side post-reader host
+    backend: str = "auto"                    # auto | fused | pallas
 
+    def __post_init__(self):
+        set_ = lambda k, v: object.__setattr__(self, k, v)
+        src = self.src or Endpoint.local(self.src_layout or L.MN)
+        dst = self.dst or Endpoint.local(self.dst_layout or L.MN)
+        pre, post = tuple(self.pre), tuple(self.post)
+        if self.plugins and (pre or post):
+            raise ValueError("pass the chain via plugins= (legacy) or "
+                             "pre=/post= (endpoint-aware), not both")
+        if self.plugins:
+            pre = tuple(self.plugins)        # legacy chain = pre-writer host
+        set_("src", src)
+        set_("dst", dst)
+        set_("pre", pre)
+        set_("post", post)
+        set_("plugins", pre + post)
+        set_("src_layout", src.layout)
+        set_("dst_layout", dst.layout)
+        if src.is_remote and dst.is_remote:
+            raise ValueError("at most one endpoint may be remote "
+                             f"({src.summary()} -> {dst.summary()})")
+        if self.backend not in ("auto", "fused", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.backend == "pallas" and self.movement != _LOCAL:
+            raise ValueError("pallas backend only lowers local movements")
+
+    # -- movement classification --------------------------------------------
+    @property
+    def movement(self) -> str:
+        """One of 'local', 'peer', 'all_to_all', 'reduce' — from the
+        descriptor alone; this is what :func:`repro.core.api.transfer`
+        dispatches on."""
+        if self.dst.is_remote:
+            return self.dst.kind
+        if self.src.is_remote:
+            return self.src.kind
+        return _LOCAL
+
+    @property
+    def is_remote(self) -> bool:
+        return self.movement != _LOCAL
+
+    @property
+    def remote(self) -> Optional[Endpoint]:
+        if self.dst.is_remote:
+            return self.dst
+        if self.src.is_remote:
+            return self.src
+        return None
+
+    # -- shape/dtype propagation through both hosts -------------------------
     def out_logical_shape(self, in_logical_shape: Sequence[int]) -> Tuple[int, ...]:
-        return P.chain_out_shape(self.plugins, tuple(in_logical_shape))
+        shape = P.chain_out_shape(self.pre, tuple(in_logical_shape))
+        return P.chain_out_shape(self.post, shape)
 
+    def out_dtype(self, in_dtype) -> Any:
+        dtype = P.chain_out_dtype(self.pre, in_dtype)
+        return P.chain_out_dtype(self.post, dtype)
+
+    # -- address-generator exports (paper Table II / Fig 2b) ----------------
     def src_pattern(self, logical_shape: Sequence[int]) -> L.AffinePattern:
-        return L.affine_pattern(self.src_layout, logical_shape)
+        return L.affine_pattern(self.src.layout, logical_shape)
 
     def dst_pattern(self, in_logical_shape: Sequence[int]) -> L.AffinePattern:
-        return L.affine_pattern(self.dst_layout, self.out_logical_shape(in_logical_shape))
+        return L.affine_pattern(self.dst.layout,
+                                self.out_logical_shape(in_logical_shape))
+
+    def src_patterns(self, logical_shape: Sequence[int]) -> Tuple[L.AffinePattern, ...]:
+        """Per-channel address generators: N_C parallel stream lanes, each
+        walking a contiguous 1/N_C slice of the logical rows from its own
+        base address (the paper's multi-channel Frontend).  channels=1
+        degenerates to [src_pattern]."""
+        self.validate(logical_shape)
+        full = self.src_pattern(logical_shape)
+        if self.channels == 1:
+            return (full,)
+        m, n = logical_shape[-2], logical_shape[-1]
+        rows = m // self.channels
+        lane_shape = tuple(logical_shape[:-2]) + (rows, n)
+        lane = L.affine_pattern(self.src.layout, lane_shape)
+        # a lane's row block starts rows*n elements after the previous one's
+        # in both MN and tiled physical order (validate() checks alignment)
+        return tuple(dataclasses.replace(lane, base=c * rows * n)
+                     for c in range(self.channels))
 
     def validate(self, in_logical_shape: Sequence[int]) -> None:
-        self.src_layout.check(in_logical_shape)
-        self.dst_layout.check(self.out_logical_shape(in_logical_shape))
+        self.src.layout.check(in_logical_shape)
+        self.dst.layout.check(self.out_logical_shape(in_logical_shape))
         if self.d_buf < 1:
             raise ValueError("d_buf must be >= 1")
+        if self.channels < 1:
+            raise ValueError("channels must be >= 1")
+        if self.channels > 1:
+            m = in_logical_shape[-2]
+            if m % self.channels:
+                raise ValueError(
+                    f"logical rows {m} not divisible by channels={self.channels}")
+            if self.src.layout.is_tiled and (m // self.channels) % self.src.layout.tile[0]:
+                raise ValueError(
+                    f"lane rows {m // self.channels} not aligned to src tile "
+                    f"rows {self.src.layout.tile[0]}")
 
     def summary(self) -> str:
-        chain = "+".join(p.name for p in self.plugins) or "copy"
-        return f"{self.src_layout.name}->[{chain}]->{self.dst_layout.name} (d_buf={self.d_buf})"
+        def chain(ps):
+            return "+".join(p.name for p in ps)
+        hosts = "|".join(filter(None, [chain(self.pre), chain(self.post)])) or "copy"
+        lanes = f", N_C={self.channels}" if self.channels != 1 else ""
+        return (f"{self.src.summary()}->[{hosts}]->{self.dst.summary()} "
+                f"(d_buf={self.d_buf}{lanes})")
+
+    def cache_key(self):
+        """Hashable identity for the CFG cache.  Falls back to object
+        identity when a plugin carries unhashable state (e.g. a weight
+        array), preserving 'one descriptor object = one CFG phase'."""
+        try:
+            return ("hash", hash(self))
+        except TypeError:
+            return ("id", id(self))
 
 
-def describe(src: str | L.Layout, dst: str | L.Layout,
-             *plugins: P.Plugin, d_buf: int = 9) -> XDMADescriptor:
-    """Convenience constructor: ``describe('MN', 'MNM16N128', Transpose())``."""
-    sl = src if isinstance(src, L.Layout) else L.by_name(src)
-    dl = dst if isinstance(dst, L.Layout) else L.by_name(dst)
-    return XDMADescriptor(src_layout=sl, dst_layout=dl, plugins=tuple(plugins), d_buf=d_buf)
+def describe(src: str | L.Layout | Endpoint, dst: str | L.Layout | Endpoint,
+             *plugins: P.Plugin, d_buf: int = 9, channels: int = 1,
+             pre: Sequence[P.Plugin] = (), post: Sequence[P.Plugin] = (),
+             backend: str = "auto") -> XDMADescriptor:
+    """Convenience constructor: ``describe('MN', 'MNM16N128', Transpose())``.
+
+    ``src``/``dst`` accept layout names, :class:`Layout`\\ s, or full
+    :class:`Endpoint`\\ s.  Positional ``plugins`` land on the pre-writer
+    host (legacy behaviour); use ``pre=``/``post=`` to place chains on a
+    specific host.  ``channels`` sets N_C (Table II) — see
+    :meth:`XDMADescriptor.src_patterns`.
+    """
+    if plugins and pre:
+        raise ValueError("pass plugins positionally or via pre=, not both")
+    s = src if isinstance(src, Endpoint) else Endpoint.local(src)
+    d = dst if isinstance(dst, Endpoint) else Endpoint.local(dst)
+    return XDMADescriptor(src=s, dst=d, pre=tuple(plugins) or tuple(pre),
+                          post=tuple(post), d_buf=d_buf, channels=channels,
+                          backend=backend)

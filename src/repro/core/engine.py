@@ -1,5 +1,9 @@
 """XDMA local engine: fused layout-transforming copies within one memory.
 
+This module is a *lowering backend*: the descriptor-driven entry point is
+:func:`repro.core.api.transfer`, which dispatches here for local movements
+(and caches one jitted executable per descriptor — the CFG phase).
+
 Two lowerings of the same descriptor:
 
 * ``xdma_copy`` — the *fused-stream* path: reader (physical->logical view),

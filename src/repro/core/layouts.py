@@ -137,11 +137,14 @@ class AffinePattern:
     """XDMA Frontend address-generator config: addr = base + sum(idx[d]*stride[d]).
 
     ``bounds`` is the paper's ``Ext`` list (loop extents, outer->inner);
-    ``strides`` are in elements.  ``dim`` == len(bounds) is Table II's ``Dim``.
+    ``strides`` and ``base`` are in elements.  ``dim`` == len(bounds) is
+    Table II's ``Dim``; multi-channel descriptors give each lane its own
+    ``base`` (see ``XDMADescriptor.src_patterns``).
     """
 
     bounds: Tuple[int, ...]
     strides: Tuple[int, ...]
+    base: int = 0
 
     @property
     def dim(self) -> int:
@@ -154,7 +157,7 @@ class AffinePattern:
     def addresses(self) -> np.ndarray:
         """Materialize the address stream (testing/small sizes only)."""
         idx = np.indices(self.bounds).reshape(self.dim, -1)
-        return (np.asarray(self.strides)[:, None] * idx).sum(0)
+        return self.base + (np.asarray(self.strides)[:, None] * idx).sum(0)
 
 
 def affine_pattern(layout: Layout, logical_shape: Sequence[int]) -> AffinePattern:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 __all__ = [
     "Plugin", "Identity", "Transpose", "Cast", "Scale", "BiasAdd",
     "RMSNormPlugin", "Quantize", "Dequantize", "QTensor", "apply_chain",
+    "chain_out_shape", "chain_out_dtype",
 ]
 
 
@@ -177,3 +178,10 @@ def chain_out_shape(plugins: Sequence[Plugin], shape: Tuple[int, ...]) -> Tuple[
     for p in plugins:
         shape = p.out_logical_shape(shape)
     return tuple(shape)
+
+
+def chain_out_dtype(plugins: Sequence[Plugin], dtype):
+    """Dtype after a cascade — the descriptor's compile-time dtype contract."""
+    for p in plugins:
+        dtype = p.out_dtype(dtype)
+    return dtype

@@ -6,9 +6,12 @@ SPMD the CFG phase is *compile time* — descriptor, geometry and plugin chain
 are burned into the executable — so runtime links carry only payload, which
 is the logical endpoint of the paper's config/data separation (DESIGN.md §2).
 
-Every function here is meant to be called *inside* a ``shard_map`` body (or
-under ``jit`` with sharded inputs), with ``axis_name`` naming the mesh axis
-that plays the role of the AXI interconnect:
+This module is a *lowering backend*: the descriptor-driven entry point is
+:func:`repro.core.api.transfer`, which dispatches here for remote endpoint
+kinds (peer / all_to_all / reduce).  Every function here is meant to be
+called *inside* a ``shard_map`` body (or under ``jit`` with sharded inputs),
+with ``axis_name`` naming the mesh axis that plays the role of the AXI
+interconnect:
 
 * :func:`xdma_ppermute`     — point-to-point tunnel (cluster i -> cluster j)
 * :func:`xdma_all_to_all`   — the MoE-dispatch pattern
@@ -96,13 +99,13 @@ def compressed_psum(x: jnp.ndarray, axis_name: str, axis_size: int,
     q = quant(rows)
     qv = lax.all_to_all(q.values, axis_name, 0, 0, tiled=True)
     qs = lax.all_to_all(q.scales, axis_name, 0, 0, tiled=True)
-    partial = (qv.astype(jnp.float32) * qs).reshape(axis_size, -1, 128).sum(0)
+    partial = dequant(P.QTensor(qv, qs)).reshape(axis_size, -1, 128).sum(0)
 
     # Phase 2: all-gather of re-quantized partials.
     q2 = quant(partial)
     gv = lax.all_gather(q2.values, axis_name, tiled=True)
     gs = lax.all_gather(q2.scales, axis_name, tiled=True)
-    full = gv.astype(jnp.float32) * gs
+    full = dequant(P.QTensor(gv, gs))
 
     out = full.reshape(-1)
     if pad:

@@ -218,8 +218,10 @@ class CostModel:
             m = re.search(key + r"=%?([\w.\-]+)", op.attrs)
             if m and m.group(1) in self.comps:
                 mult = trips if op.kind == "while" else 1.0
-                if key == "to_apply":
-                    continue          # tiny reducers: ignore
+                if key == "to_apply" and op.kind != "call":
+                    continue          # tiny reducers (reduce/map/sort): ignore
+                    # (`call ... to_apply=` is a real computation call — the
+                    # CPU backend wraps parallel fusions this way)
                 out.append((m.group(1), mult))
         # conditionals: branch computations listed in branch_computations={...}
         m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)

@@ -66,8 +66,8 @@ def train(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
             if n_dev % m == 0:
                 model = m
                 break
-        mesh = jax.make_mesh((n_dev // model, model), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.sharding import make_mesh_compat
+        mesh = make_mesh_compat((n_dev // model, model), ("data", "model"))
         shape_tmp = ShapeConfig("cli", seq, batch, "train", microbatches)
         cfg = cfg.with_axes(MM.axes_for(mesh, shape_tmp))
         cfg = dataclasses.replace(cfg, fsdp=True)

@@ -24,8 +24,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import plugins as XP
-from repro.core.remote import xdma_all_to_all
-from repro.sharding import constrain, P
+from repro.core.api import XDMAQueue
+from repro.core.descriptor import Endpoint, XDMADescriptor
+from repro.sharding import constrain, P, shard_map_compat
 
 
 def init_moe(key, cfg):
@@ -92,6 +93,24 @@ def _combine(cfg, out_buf, slot, keep, order, gates, T, d):
     return y
 
 
+def _dispatch_queue(model_axis: str, dtype, wire_plugins) -> XDMAQueue:
+    """The expert-parallel exchange as the Controller's task queue: task 0 is
+    the dispatch all-to-all, task 1 the mirrored return — both endpoint-aware
+    descriptors with the wire plugins on the pre host and Dequantize on the
+    post (dst half-XDMA) host.  Built once per trace; the descriptor fixes
+    geometry + plugin chain so the link carries only payload."""
+    pre = tuple(wire_plugins)
+    post = (XP.Dequantize(dtype),) if pre else ()
+    return XDMAQueue([
+        XDMADescriptor(dst=Endpoint.all_to_all(model_axis, split_axis=0,
+                                               concat_axis=1),
+                       pre=pre, post=post),
+        XDMADescriptor(dst=Endpoint.all_to_all(model_axis, split_axis=1,
+                                               concat_axis=0),
+                       pre=pre, post=post),
+    ], name="moe_dispatch")
+
+
 def _moe_tokens(cfg, p, tokens, *, model_axis: Optional[str], n_model: int,
                 wire_plugins=()):
     """Core MoE on a (T, d) token slab; a2a over model_axis when distributed."""
@@ -101,18 +120,14 @@ def _moe_tokens(cfg, p, tokens, *, model_axis: Optional[str], n_model: int,
     capacity = int(cfg.capacity_factor * k * T // E) + 1
     buf, slot, keep, order, tok_of = _dispatch(cfg, tokens, eidx, gates, capacity)
 
-    if model_axis is not None:
+    queue = (None if model_axis is None
+             else _dispatch_queue(model_axis, buf.dtype, wire_plugins))
+    if queue is not None:
         # (E, C, d) -> (E_local, n_model*C, d): the XDMA dispatch tunnel
-        pre = list(wire_plugins)
-        post = [XP.Dequantize(buf.dtype)] if pre else []
-        buf = xdma_all_to_all(buf, model_axis, split_axis=0, concat_axis=1,
-                              pre=pre, post=post)
-    out = _expert_ffn(cfg, p if model_axis is None else p, buf)
-    if model_axis is not None:
-        pre = list(wire_plugins)
-        post = [XP.Dequantize(out.dtype)] if pre else []
-        out = xdma_all_to_all(out, model_axis, split_axis=1, concat_axis=0,
-                              pre=pre, post=post)
+        buf = queue.run_task(buf, 0)
+    out = _expert_ffn(cfg, p, buf)
+    if queue is not None:
+        out = queue.run_task(out, 1)
     y = _combine(cfg, out, slot, keep, order, gates, T, d)
     return y, aux
 
@@ -146,8 +161,6 @@ def moe_apply(cfg, p, x, *, mesh=None):
     if axes.model is None or mesh is None:
         y, aux = _moe_tokens(cfg, p, x.reshape(-1, d), model_axis=None, n_model=1)
         return y.reshape(B, S, d), aux
-
-    from jax import shard_map
 
     n_model = mesh.shape[axes.model]
     bspec = axes.batch_spec
@@ -213,7 +226,6 @@ def moe_apply(cfg, p, x, *, mesh=None):
         wspecs = [P(), P(), P()]
     in_specs = (P(bspec, None, None), P(), *wspecs)
     out_specs = (P(bspec, None, None), P())
-    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_vma=False)
+    fn = shard_map_compat(body, mesh, in_specs, out_specs)
     y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     return y, aux

@@ -6,17 +6,24 @@ fused stream, no intermediate (the RMSNorm plugin sits at the pre-writer
 host).  *Load* (paper Load 1–3): the cache is streamed back transposed for
 the q.K^T access pattern, again one pass.  *Cross-stage transfer*: the cache
 moves from a prefill stage to a decode stage (disaggregated serving) through
-an XDMA virtual tunnel (``ppermute``) with the relayout fused on the wire.
+an XDMA virtual tunnel (a ``peer`` endpoint) with the relayout fused on the
+wire.
+
+All movements go through the unified :func:`repro.core.api.transfer` entry
+point: each workload is one descriptor (built once per call signature, the
+CFG phase), and the store+load roundtrip is expressible as an
+:class:`~repro.core.api.XDMAQueue` (see :func:`kv_roundtrip_queue`).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (MN, Layout, RMSNormPlugin, Transpose, describe,
-                        layout_for_dtype, xdma_copy, xdma_ppermute)
+from repro.core import (MN, Endpoint, Layout, RMSNormPlugin, Transpose,
+                        XDMAQueue, describe, layout_for_dtype, xdma, xdma_copy)
 
 
 def _as_matrix(kv: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
@@ -26,22 +33,58 @@ def _as_matrix(kv: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
     return kv.reshape(B, S, KV * hd), (B, S, KV, hd)
 
 
+@functools.lru_cache(maxsize=None)
+def _store_desc(dtype_name: str, d_buf: int, eps: float):
+    tiled = layout_for_dtype(jnp.dtype(dtype_name))
+    return describe(MN, tiled, RMSNormPlugin(eps=eps), d_buf=d_buf)
+
+
 def kv_prefill_store(kv: jnp.ndarray, *, norm_weight=None, d_buf: int = 9,
                      eps: float = 1e-6) -> jnp.ndarray:
     """RMSNorm-on-stream + tile: (B,S,KV,hd) -> (B, S/tm, d/128, tm, 128)."""
     mat, _ = _as_matrix(kv)
-    tiled_layout = layout_for_dtype(mat.dtype)
-    desc = describe(MN, tiled_layout,
+    if norm_weight is None:
+        return xdma.transfer(mat, _store_desc(jnp.dtype(mat.dtype).name,
+                                              d_buf, eps))
+    # Weighted norm: the weight array makes the descriptor identity-cached,
+    # so a per-call descriptor would grow the CFG cache without bound — run
+    # the engine lowering directly (eager fusion, pre-redesign behaviour).
+    desc = describe(MN, layout_for_dtype(mat.dtype),
                     RMSNormPlugin(eps=eps, weight=norm_weight), d_buf=d_buf)
-    return jax.vmap(lambda m: xdma_copy(m, desc))(mat)
+    return xdma_copy(mat, desc)
+
+
+@functools.lru_cache(maxsize=None)
+def _load_desc(tm: int, tn: int, d_buf: int):
+    layout = Layout((tm, tn), f"MNM{tm}N{tn}")
+    return describe(layout, MN, Transpose(), d_buf=d_buf)
 
 
 def kv_load_transposed(tiled: jnp.ndarray, *, d_buf: int = 9) -> jnp.ndarray:
     """Stream the tiled cache back as K^T (d_kv, S) matrices, transpose fused."""
     tm, tn = tiled.shape[-2], tiled.shape[-1]
-    layout = Layout((tm, tn), f"MNM{tm}N{tn}")
-    desc = describe(layout, MN, Transpose(), d_buf=d_buf)
-    return jax.vmap(lambda m: xdma_copy(m, desc))(tiled)
+    return xdma.transfer(tiled, _load_desc(tm, tn, d_buf))
+
+
+def kv_roundtrip_queue(dtype=jnp.float32, *, d_buf: int = 9,
+                       eps: float = 1e-6) -> XDMAQueue:
+    """Store-then-load as one in-order task queue (one fused executable):
+    norm+tile on the way in, transpose+untile on the way out — the
+    Controller's task FIFO for the full §III-C roundtrip."""
+    tiled = layout_for_dtype(dtype)
+    tm, tn = tiled.tile
+    return XDMAQueue([
+        _store_desc(jnp.dtype(dtype).name, d_buf, eps),
+        _load_desc(tm, tn, d_buf),
+    ], name="kv_roundtrip")
+
+
+@functools.lru_cache(maxsize=None)
+def _tunnel_desc(axis_name: str, perm: Tuple[Tuple[int, int], ...],
+                 transpose: bool, d_buf: int):
+    pre = (Transpose(),) if transpose else ()
+    return describe(Endpoint.local(MN), Endpoint.peer(axis_name, perm, MN),
+                    pre=pre, d_buf=d_buf)
 
 
 def cross_stage_transfer(kv: jnp.ndarray, axis_name: str,
@@ -50,8 +93,9 @@ def cross_stage_transfer(kv: jnp.ndarray, axis_name: str,
     """Move a cache shard prefill-rank -> decode-rank through one XDMA tunnel,
     optionally transposing in flight.  Call inside shard_map."""
     mat, orig = _as_matrix(kv)
-    pre = (Transpose(),) if transpose else ()
-    out = xdma_ppermute(mat, axis_name, list(perm), pre=pre)
+    desc = _tunnel_desc(axis_name, tuple(tuple(p) for p in perm),
+                        bool(transpose), d_buf)
+    out = xdma.transfer(mat, desc)
     if transpose:
         return out                                      # (B, d_kv, S)
     return out.reshape(orig)

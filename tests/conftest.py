@@ -7,6 +7,36 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")
 
+# -- optional-hypothesis shim (see requirements-dev.txt) ---------------------
+# Property-based tests import `given/settings/st` from here instead of from
+# hypothesis directly, so the tier-1 suite still *collects* on a clean
+# machine: with hypothesis installed the real decorators are re-exported;
+# without it, @given tests skip and every other test in the module runs.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on clean machines
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _StrategiesStub:
+        """Any strategy call returns None; @st.composite yields a dummy
+        factory — enough for module-level decorators to evaluate."""
+
+        @staticmethod
+        def composite(_fn):
+            return lambda *a, **k: None
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategiesStub()
+
 
 def run_multidevice(snippet: str, n_devices: int = 8, timeout: int = 300) -> str:
     """Run a python snippet in a subprocess with N placeholder CPU devices.
