@@ -21,8 +21,6 @@ import numpy as np
 from repro import core as C
 from repro.core import xdma
 
-from .common import bench
-
 CASES = [
     ("copy_tile", lambda: C.describe("MN", "MNM8N128")),
     ("rmsnorm_tile", lambda: C.describe("MN", "MNM8N128", C.RMSNormPlugin())),

@@ -1,33 +1,57 @@
 """Benchmark harness entry: one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (derived = utilization for Fig.4
-rows, acceleration ratio for Table III rows, roofline fraction for the
+Prints ``name,us_per_call,derived`` CSV (derived = utilization for Fig.4 and
+sched rows, acceleration ratio for Table III rows, roofline fraction for the
 dry-run-derived rows).
 
-  PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+  PYTHONPATH=src python -m benchmarks.run [--only SECTION] [--list] [--sim]
+
+Sections live in one registry: adding a benchmark module here is the single
+step that wires it into ``--only``, ``--list``, and the default full run.
+``--sim`` asks sections that support it (``sched``) to use the deterministic
+simulator only, executing nothing — the CI smoke mode.
 """
 import argparse
+import importlib
+import inspect
+
+# section name -> (module under benchmarks/, one-line description)
+SECTIONS = {
+    "fig4": ("link_utilization", "paper Fig.4 link utilization sweep"),
+    "tableIII": ("kv_cache", "paper Table III KV-cache workloads"),
+    "cfgcache": ("cfg_cache", "CFG-cache retrace overhead"),
+    "sched": ("sched", "distributed scheduler vs in-order queue (multi-link)"),
+    "roofline": ("roofline", "dry-run roofline fractions"),
+}
+
+
+def run_section(name: str, *, sim: bool = False) -> None:
+    module_name, _ = SECTIONS[name]
+    module = importlib.import_module(f".{module_name}", package=__package__)
+    kwargs = {}
+    if "sim" in inspect.signature(module.run).parameters:
+        kwargs["sim"] = sim
+    module.run(**kwargs)
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["fig4", "tableIII", "roofline",
-                                       "cfgcache"],
-                    default=None)
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--only", choices=sorted(SECTIONS), default=None,
+                    help="run a single section")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered sections and exit")
+    ap.add_argument("--sim", action="store_true",
+                    help="simulator-only mode for sections that support it")
     args = ap.parse_args()
+    if args.list:
+        for name, (module_name, blurb) in SECTIONS.items():
+            print(f"{name:10s} benchmarks/{module_name}.py  {blurb}")
+        return
     print("name,us_per_call,derived")
-    if args.only in (None, "fig4"):
-        from . import link_utilization
-        link_utilization.run()
-    if args.only in (None, "tableIII"):
-        from . import kv_cache
-        kv_cache.run()
-    if args.only in (None, "cfgcache"):
-        from . import cfg_cache
-        cfg_cache.run()
-    if args.only in (None, "roofline"):
-        from . import roofline
-        roofline.run()
+    for name in SECTIONS:
+        if args.only in (None, name):
+            run_section(name, sim=args.sim)
 
 
 if __name__ == '__main__':

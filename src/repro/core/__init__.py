@@ -12,6 +12,9 @@ from .engine import xdma_copy, xdma_copy_jit, xdma_copy_pallas, reader, writer  
 from .remote import (  # noqa: F401
     xdma_ppermute, xdma_all_to_all, compressed_psum, compressed_psum_with_feedback,
 )
-from .api import XDMAQueue, transfer, cache_stats, clear_cache  # noqa: F401
+from .api import (  # noqa: F401
+    XDMAQueue, transfer, cache_stats, clear_cache,
+    cache_capacity, set_cache_capacity,
+)
 from . import api as xdma  # noqa: F401  (usage: from repro.core import xdma)
 from . import baselines  # noqa: F401

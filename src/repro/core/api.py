@@ -23,6 +23,7 @@ a sequence of descriptors lowered as one fused, ordered program.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -35,7 +36,8 @@ from . import plugins as P
 from . import remote
 from .descriptor import Endpoint, XDMADescriptor
 
-__all__ = ["transfer", "XDMAQueue", "cache_stats", "clear_cache"]
+__all__ = ["transfer", "XDMAQueue", "cache_stats", "clear_cache",
+           "cache_capacity", "set_cache_capacity"]
 
 
 # -- the CFG cache: descriptor -> lowered callable ---------------------------
@@ -43,26 +45,55 @@ __all__ = ["transfer", "XDMAQueue", "cache_stats", "clear_cache"]
 class _CacheStats:
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
 
     @property
     def size(self):
         return len(_CACHE)
 
 
-# key -> (descriptor kept alive so id-keys stay unique, lowered callable)
-_CACHE: Dict[Any, Tuple[XDMADescriptor, Callable]] = {}
+# LRU: key -> (descriptor kept alive so id-keys stay unique, lowered callable).
+# Bounded so descriptor churn (per-call descriptors carrying weight arrays,
+# id-keyed) cannot grow it without limit; the default is generous enough that
+# steady-state workloads never evict.
+_CACHE: "collections.OrderedDict[Any, Tuple[XDMADescriptor, Callable]]" = \
+    collections.OrderedDict()
 _STATS = _CacheStats()
+_DEFAULT_CAPACITY = 1024
+_CAPACITY = _DEFAULT_CAPACITY
 
 
 def cache_stats() -> _CacheStats:
-    """Hit/miss counters for the per-descriptor CFG cache."""
+    """Hit/miss/eviction counters for the per-descriptor CFG cache."""
     return _STATS
+
+
+def cache_capacity() -> int:
+    """Current CFG-cache capacity (entries)."""
+    return _CAPACITY
+
+
+def set_cache_capacity(n: int) -> None:
+    """Bound the CFG cache to ``n`` entries (LRU eviction), evicting now if
+    already over.  The capacity survives :func:`clear_cache`."""
+    global _CAPACITY
+    if n < 1:
+        raise ValueError("cache capacity must be >= 1")
+    _CAPACITY = int(n)
+    _evict_to_capacity()
+
+
+def _evict_to_capacity() -> None:
+    while len(_CACHE) > _CAPACITY:
+        _CACHE.popitem(last=False)      # least recently used first
+        _STATS.evictions += 1
 
 
 def clear_cache() -> None:
     _CACHE.clear()
     _STATS.hits = 0
     _STATS.misses = 0
+    _STATS.evictions = 0
 
 
 def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
@@ -95,10 +126,15 @@ def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
         elif movement == "reduce":
             # A Quantize/Dequantize pair around the link is the wire codec:
             # compressed_psum owns it (its two-phase decomposition re-quantizes
-            # internally).  Any other pre/post plugins run as normal hosts.
+            # internally).  Any other pre/post plugins run as normal hosts —
+            # a Dequantize without a matching pre Quantize is NOT a codec and
+            # stays on the post host (applying it to a non-QTensor then fails
+            # loudly instead of silently breaking the dtype contract).
             pre_rest = tuple(p for p in desc.pre if not isinstance(p, P.Quantize))
-            post_rest = tuple(p for p in desc.post if not isinstance(p, P.Dequantize))
             codec = len(pre_rest) != len(desc.pre)
+            post_rest = (tuple(p for p in desc.post
+                               if not isinstance(p, P.Dequantize))
+                         if codec else desc.post)
             y = P.apply_chain(pre_rest, logical)
             if codec:
                 deq = [p for p in desc.post if isinstance(p, P.Dequantize)]
@@ -123,10 +159,12 @@ def _lowered(desc: XDMADescriptor, interpret: bool) -> Callable:
     entry = _CACHE.get(key)
     if entry is not None:
         _STATS.hits += 1
+        _CACHE.move_to_end(key)
         return entry[1]
     _STATS.misses += 1
     fn = _lower(desc, interpret)
     _CACHE[key] = (desc, fn)
+    _evict_to_capacity()
     return fn
 
 

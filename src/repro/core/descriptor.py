@@ -245,13 +245,17 @@ class XDMADescriptor:
                 f"(d_buf={self.d_buf}{lanes})")
 
     def cache_key(self):
-        """Hashable identity for the CFG cache.  Falls back to object
-        identity when a plugin carries unhashable state (e.g. a weight
-        array), preserving 'one descriptor object = one CFG phase'."""
+        """Hashable identity for the CFG cache: the descriptor itself when
+        hashable (dict lookup then uses hash *and* equality, so structurally
+        equal descriptors share one CFG phase and hash collisions stay
+        harmless).  Falls back to object identity when a plugin carries
+        unhashable state (e.g. a weight array), preserving 'one descriptor
+        object = one CFG phase'."""
         try:
-            return ("hash", hash(self))
+            hash(self)
         except TypeError:
             return ("id", id(self))
+        return self
 
 
 def describe(src: str | L.Layout | Endpoint, dst: str | L.Layout | Endpoint,

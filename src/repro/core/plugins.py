@@ -87,7 +87,7 @@ class Transpose(Plugin):
         return tuple(shape[:-2]) + (shape[-1], shape[-2])
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class Cast(Plugin):
     dtype: Any = jnp.bfloat16
     name: str = "cast"
@@ -99,7 +99,7 @@ class Cast(Plugin):
         return self.dtype
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class Scale(Plugin):
     alpha: float = 1.0
     name: str = "scale"
@@ -108,7 +108,7 @@ class Scale(Plugin):
         return x * jnp.asarray(self.alpha, dtype=x.dtype)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class BiasAdd(Plugin):
     bias: Any = 0.0
     name: str = "bias_add"
@@ -117,7 +117,7 @@ class BiasAdd(Plugin):
         return x + jnp.asarray(self.bias, dtype=x.dtype)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class RMSNormPlugin(Plugin):
     """RMSNorm over the last logical dim, on-stream (paper §III-C Prefill).
 
@@ -138,7 +138,7 @@ class RMSNormPlugin(Plugin):
         return y.astype(dtype)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class Quantize(Plugin):
     """Symmetric per-row int8 quantization on the wire (compression plugin)."""
 
@@ -155,7 +155,7 @@ class Quantize(Plugin):
         return jnp.int8
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class Dequantize(Plugin):
     dtype: Any = jnp.float32
     name: str = "dequantize_int8"

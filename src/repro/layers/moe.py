@@ -112,22 +112,63 @@ def _dispatch_queue(model_axis: str, dtype, wire_plugins) -> XDMAQueue:
 
 
 def _moe_tokens(cfg, p, tokens, *, model_axis: Optional[str], n_model: int,
-                wire_plugins=()):
-    """Core MoE on a (T, d) token slab; a2a over model_axis when distributed."""
+                wire_plugins=(), scheduler=None, overlap_chunks: int = 2):
+    """Core MoE on a (T, d) token slab; a2a over model_axis when distributed.
+
+    With a :class:`~repro.runtime.DistributedScheduler` the dispatch buffer is
+    split into ``overlap_chunks`` capacity slices, each running its own
+    dispatch-a2a -> expert FFN -> return-a2a chain: chunks alternate over the
+    topology's links while FFN runs on a compute engine, so chunk i+1's
+    dispatch overlaps chunk i's FFN in the scheduled timeline (the paper's
+    compute-while-transfer at link granularity).  Slot indexing is unchanged —
+    chunk c is capacity rows [c*Cc, (c+1)*Cc) of every expert — so the math
+    matches the unchunked queue path.
+    """
     T, d = tokens.shape
     k, E = cfg.top_k, cfg.n_experts
     gates, eidx, aux = _route(cfg, p["router"], tokens)
     capacity = int(cfg.capacity_factor * k * T // E) + 1
-    buf, slot, keep, order, tok_of = _dispatch(cfg, tokens, eidx, gates, capacity)
 
     queue = (None if model_axis is None
-             else _dispatch_queue(model_axis, buf.dtype, wire_plugins))
-    if queue is not None:
-        # (E, C, d) -> (E_local, n_model*C, d): the XDMA dispatch tunnel
-        buf = queue.run_task(buf, 0)
-    out = _expert_ffn(cfg, p, buf)
-    if queue is not None:
-        out = queue.run_task(out, 1)
+             else _dispatch_queue(model_axis, tokens.dtype, wire_plugins))
+    chunked = queue is not None and scheduler is not None and overlap_chunks > 1
+    buf, slot, keep, order, tok_of = _dispatch(cfg, tokens, eidx, gates, capacity)
+
+    if chunked:
+        # pad the *buffer* (not the capacity) to a chunk multiple: slot/keep
+        # were computed with the real capacity, so token dropping is identical
+        # to the unchunked path and the pad slots are never referenced
+        cap_pad = -(-capacity // overlap_chunks) * overlap_chunks
+        if cap_pad != capacity:
+            buf = jnp.pad(buf, ((0, 0), (0, cap_pad - capacity), (0, 0)))
+        links = scheduler.topology.link_names
+        Cc = cap_pad // overlap_chunks
+        # simulated FFN cost: 3 (Eloc, n*Cc, d)x(d, f) einsums per chunk at a
+        # nominal accelerator rate — enough to place compute on the timeline
+        ffn_s = 6.0 * E * Cc * d * cfg.d_ff_expert / 50e12
+        futs = []
+        for c in range(overlap_chunks):
+            sub = lax.slice_in_dim(buf, c * Cc, (c + 1) * Cc, axis=1)
+            f_out = scheduler.submit(sub, queue.descriptors[0],
+                                     link=links[c % len(links)],
+                                     label=f"a2a_dispatch[{c}]")
+            f_ffn = scheduler.submit_compute(
+                lambda b: _expert_ffn(cfg, p, b), f_out,
+                resource="expert_ffn", cost_s=ffn_s,
+                label=f"expert_ffn[{c}]")
+            futs.append(scheduler.submit(f_ffn, queue.descriptors[1],
+                                         link=links[c % len(links)],
+                                         label=f"a2a_return[{c}]"))
+        scheduler.flush()
+        out = jnp.concatenate([f.result() for f in futs], axis=1)
+        out = out[:, :capacity]          # drop the pad slots before combine
+    else:
+        if queue is not None:
+            # (E, C, d) -> (E_local, n_model*C, d): the XDMA dispatch tunnel
+            buf = queue.run_task(buf, 0)
+        out = _expert_ffn(cfg, p, buf)
+        if queue is not None:
+            out = queue.run_task(out, 1)
     y = _combine(cfg, out, slot, keep, order, gates, T, d)
     return y, aux
 
@@ -146,7 +187,7 @@ def ep_enabled(cfg, n_model: int) -> bool:
     return cfg.n_experts % n_model == 0
 
 
-def moe_apply(cfg, p, x, *, mesh=None):
+def moe_apply(cfg, p, x, *, mesh=None, scheduler=None, overlap_chunks: int = 2):
     """x (B, S, d) -> (y, aux_loss).
 
     Distributed (cfg.axes.model set + mesh given): runs under shard_map.
@@ -155,6 +196,11 @@ def moe_apply(cfg, p, x, *, mesh=None):
       * TP path (otherwise, incl. decode S=1): tokens replicated over model,
         expert d_ff sharded, one psum (Megatron-style).
     Local (tests / no mesh): same math, no collectives.
+
+    ``scheduler`` (a :class:`~repro.runtime.DistributedScheduler`) routes the
+    EP dispatch through chunked per-link FIFOs so the a2a overlaps expert FFN
+    in the scheduled timeline (see :func:`_moe_tokens`); pass a fresh one per
+    call and read ``scheduler.report()`` afterwards.
     """
     B, S, d = x.shape
     axes = cfg.axes
@@ -177,7 +223,8 @@ def moe_apply(cfg, p, x, *, mesh=None):
         pl = {"router": router_w, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
         y, aux = _moe_tokens(cfg, pl, xs.reshape(-1, d),
                              model_axis=axes.model, n_model=n_model,
-                             wire_plugins=wire)
+                             wire_plugins=wire, scheduler=scheduler,
+                             overlap_chunks=overlap_chunks)
         y = lax.all_gather(y.reshape(Bl, Sl, d), axes.model, axis=1, tiled=True)
         aux = lax.pmean(aux, all_axes)
         return y, aux
@@ -190,7 +237,8 @@ def moe_apply(cfg, p, x, *, mesh=None):
         pl = {"router": router_w, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
         y, aux = _moe_tokens(cfg, pl, xl.reshape(-1, d),
                              model_axis=axes.model, n_model=n_model,
-                             wire_plugins=wire)
+                             wire_plugins=wire, scheduler=scheduler,
+                             overlap_chunks=overlap_chunks)
         aux = lax.pmean(aux, all_axes)
         return y.reshape(xl.shape), aux
 

@@ -1,0 +1,19 @@
+"""repro.runtime — the distributed XDMA runtime (DESIGN.md §6).
+
+Three layers, mirroring the paper's distributed Controller:
+
+* :mod:`~repro.runtime.topology` — the link fabric (nodes = device memories,
+  edges = links with a bandwidth/latency/width cost model), with TPU-mesh,
+  ring, host-device, and parallel-lane presets;
+* :mod:`~repro.runtime.scheduler` — async dispatch: ``submit`` routes
+  descriptors to per-link in-order FIFOs, returns :class:`XDMAFuture` tokens,
+  and drains ready tasks on distinct links together in batched rounds;
+* :mod:`~repro.runtime.simulator` — deterministic event-driven replay of any
+  schedule against a topology: per-link utilization, contention stalls,
+  makespan (Fig. 4 numbers without host-timing noise).
+"""
+from .topology import Link, Topology  # noqa: F401
+from .simulator import (  # noqa: F401
+    SimReport, SimTask, Span, queue_sim_tasks, serialize, simulate,
+)
+from .scheduler import DistributedScheduler, XDMAFuture  # noqa: F401

@@ -1,0 +1,298 @@
+"""Async XDMA dispatch: per-link in-order FIFOs, futures, batched rounds.
+
+Paper §II-B gives each *link* its own Controller task FIFO: tasks on one link
+dispatch strictly in order, tasks on different links dispatch concurrently.
+:class:`DistributedScheduler` is that Controller distributed across a
+:class:`~repro.runtime.topology.Topology`:
+
+* ``submit(x, desc, link=..., deps=...)`` routes one descriptor to a per-link
+  FIFO and returns an :class:`XDMAFuture` immediately — the token other tasks
+  name as a dependency (the CFG phase stays compile-time: lowering reuses the
+  per-descriptor cache in :mod:`repro.core.api`).
+* ``submit_compute(fn, ...)`` enqueues interleaved compute (expert FFN, host
+  preprocessing) on a named compute engine so transfer/compute overlap is
+  visible to the simulator.
+* ``flush()`` drains the FIFOs in *scheduling rounds*: each round takes the
+  ready head task of every resource and dispatches them together — local
+  concrete-array tasks are fused into one batched XLA program per round
+  (cached by the tuple of descriptor identities), everything else dispatches
+  through exactly the same cached lowering ``xdma.transfer`` uses, so results
+  are bit-identical to a serial replay of the same descriptors.
+
+Every dispatch is recorded; ``sim_tasks()`` / ``report()`` replay the
+schedule through :mod:`repro.runtime.simulator` for deterministic per-link
+utilization and makespan numbers (ISSUE Fig. 4 without host-timing noise).
+
+The scheduler is trace-transparent: submitting tracers (inside ``shard_map``
+or ``jit``) simply threads the symbolic values through the same round
+structure, skipping only the round-batching jit — the recorded schedule is
+identical, which is how the MoE a2a/FFN overlap gets simulated.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import api as _api
+from repro.core.descriptor import XDMADescriptor
+
+from .simulator import SimReport, SimTask, simulate
+from .topology import Topology
+
+__all__ = ["XDMAFuture", "DistributedScheduler"]
+
+# Batched-round programs, shared by every scheduler instance: keyed by the
+# round's descriptor identities (same scheme as the CFG cache), so a fresh
+# scheduler per step replays compiled rounds instead of retracing them.
+# Bounded LRU for the same reason the CFG cache is: id-keyed descriptor
+# churn must not pin programs (and captured weight arrays) forever.
+_ROUND_CACHE: "collections.OrderedDict[Any, Callable]" = collections.OrderedDict()
+_ROUND_CACHE_CAPACITY = 256
+
+
+def _nbytes(value: Any) -> int:
+    """Payload bytes of an array / QTensor / pytree (works on tracers)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(value):
+        size = getattr(leaf, "size", None)
+        dtype = getattr(leaf, "dtype", None)
+        if size is not None and dtype is not None:
+            import numpy as np
+            total += int(size) * int(np.dtype(dtype).itemsize)
+    return total
+
+
+class XDMAFuture:
+    """Handle for a submitted task: a dependency token and a deferred result."""
+
+    __slots__ = ("_sched", "task_id")
+
+    def __init__(self, sched: "DistributedScheduler", task_id: int):
+        self._sched = sched
+        self.task_id = task_id
+
+    def done(self) -> bool:
+        return self._sched._tasks[self.task_id].done
+
+    def result(self) -> Any:
+        """Drain the scheduler until this task has dispatched, then return
+        its output (the physical dst buffer, exactly as ``xdma.transfer``)."""
+        self._sched.flush()
+        return self._sched._tasks[self.task_id].value
+
+    def __repr__(self):
+        state = "done" if self.done() else "pending"
+        return f"XDMAFuture(task={self.task_id}, {state})"
+
+
+@dataclasses.dataclass
+class _Task:
+    id: int
+    kind: str                            # "xdma" | "compute"
+    resource: str
+    deps: Tuple[int, ...]
+    desc: Optional[XDMADescriptor] = None
+    fn: Optional[Callable] = None
+    inputs: Tuple[Any, ...] = ()         # arrays or XDMAFutures
+    cost_s: float = 0.0
+    nbytes: Optional[int] = None
+    label: str = ""
+    done: bool = False
+    value: Any = None
+    round: int = -1
+
+
+class DistributedScheduler:
+    """The distributed Controller: one in-order FIFO per topology link."""
+
+    def __init__(self, topology: Topology, *, interpret: bool = True,
+                 name: str = "sched"):
+        self.topology = topology
+        self.interpret = interpret
+        self.name = name
+        self._tasks: Dict[int, _Task] = {}
+        self._fifos: Dict[str, List[int]] = {n: [] for n in topology.link_names}
+        self._heads: Dict[str, int] = {n: 0 for n in topology.link_names}
+        self._next_id = 0
+        self._next_link = 0              # round-robin routing cursor
+        self._rounds = 0
+
+    # -- submission ----------------------------------------------------------
+    def _route(self, desc: XDMADescriptor, link: Optional[str]) -> str:
+        if link is not None:
+            self.topology.link(link)     # raises on unknown names
+            return link
+        # Default policy: round-robin over the fabric — the Controller's
+        # load-balancing when the descriptor does not pin a link.
+        names = self.topology.link_names
+        if not names:
+            raise ValueError(f"topology {self.topology.name!r} has no links")
+        name = names[self._next_link % len(names)]
+        self._next_link += 1
+        return name
+
+    def _enqueue(self, task: _Task) -> XDMAFuture:
+        for d in task.deps:
+            if d not in self._tasks:
+                raise ValueError(f"dependency on unknown task {d}")
+        self._tasks[task.id] = task
+        self._fifos.setdefault(task.resource, [])
+        self._heads.setdefault(task.resource, 0)
+        self._fifos[task.resource].append(task.id)
+        return XDMAFuture(self, task.id)
+
+    @staticmethod
+    def _dep_ids(inputs: Sequence[Any], deps: Sequence) -> Tuple[int, ...]:
+        ids: List[int] = []
+        for obj in list(inputs) + list(deps):
+            if isinstance(obj, XDMAFuture):
+                if obj.task_id not in ids:
+                    ids.append(obj.task_id)
+        return tuple(ids)
+
+    def submit(self, x: Any, desc: XDMADescriptor, *,
+               link: Optional[str] = None, deps: Sequence = (),
+               nbytes: Optional[int] = None, label: str = "") -> XDMAFuture:
+        """Route one XDMA task to a per-link FIFO; returns its future.
+
+        ``x`` is the src physical buffer or the :class:`XDMAFuture` of the
+        task producing it; ``deps`` adds ordering-only dependency tokens.
+        ``link`` pins the task to a named link (round-robin otherwise).
+        """
+        if not isinstance(desc, XDMADescriptor):
+            raise TypeError(f"submit takes a descriptor, got {type(desc)}")
+        tid = self._next_id
+        self._next_id += 1
+        task = _Task(id=tid, kind="xdma", resource=self._route(desc, link),
+                     deps=self._dep_ids((x,), deps), desc=desc, inputs=(x,),
+                     nbytes=nbytes, label=label or desc.summary())
+        return self._enqueue(task)
+
+    def submit_compute(self, fn: Callable, *inputs: Any,
+                       resource: str = "compute0", deps: Sequence = (),
+                       cost_s: float = 0.0, label: str = "") -> XDMAFuture:
+        """Enqueue interleaved compute on a named engine (in-order per
+        engine).  ``cost_s`` is its duration in the simulated timeline."""
+        if resource in self.topology:
+            raise ValueError(f"{resource!r} is a link; compute engines must "
+                             "use a non-link resource name")
+        tid = self._next_id
+        self._next_id += 1
+        task = _Task(id=tid, kind="compute", resource=resource,
+                     deps=self._dep_ids(inputs, deps), fn=fn, inputs=inputs,
+                     cost_s=float(cost_s), label=label or getattr(fn, "__name__", "compute"))
+        return self._enqueue(task)
+
+    # -- dispatch ------------------------------------------------------------
+    def _resolve(self, obj: Any) -> Any:
+        if isinstance(obj, XDMAFuture):
+            return self._tasks[obj.task_id].value
+        return obj
+
+    def _ready_heads(self) -> List[_Task]:
+        ready = []
+        for res in self._fifos:
+            q = self._fifos[res]
+            i = self._heads[res]
+            if i >= len(q):
+                continue
+            t = self._tasks[q[i]]
+            if all(self._tasks[d].done for d in t.deps):
+                ready.append(t)
+        return ready
+
+    @staticmethod
+    def _batchable(t: _Task, x: Any) -> bool:
+        return (t.kind == "xdma" and t.desc is not None
+                and t.desc.movement == "local" and t.desc.backend != "pallas"
+                and not isinstance(x, jax.core.Tracer))
+
+    def _dispatch_round(self, ready: List[_Task]) -> None:
+        inputs = [self._resolve(t.inputs[0]) if t.inputs else None
+                  for t in ready]
+        batch = [i for i, t in enumerate(ready)
+                 if self._batchable(t, inputs[i])]
+        if len(batch) > 1:
+            # One batched XLA program for the round: the cached per-descriptor
+            # lowerings are inlined into a single jitted tuple program, cached
+            # by the round's descriptor identities.
+            key = tuple((ready[i].desc.cache_key(), self.interpret)
+                        for i in batch)
+            fused = _ROUND_CACHE.get(key)
+            if fused is None:
+                fns = tuple(_api._lowered(ready[i].desc, self.interpret)
+                            for i in batch)
+                fused = jax.jit(lambda xs, _fns=fns:
+                                tuple(f(x) for f, x in zip(_fns, xs)))
+                _ROUND_CACHE[key] = fused
+                while len(_ROUND_CACHE) > _ROUND_CACHE_CAPACITY:
+                    _ROUND_CACHE.popitem(last=False)
+            else:
+                _ROUND_CACHE.move_to_end(key)
+            outs = fused(tuple(inputs[i] for i in batch))
+            for i, out in zip(batch, outs):
+                ready[i].value = out
+        else:
+            batch = []
+        fused_ids = set(batch)
+        for i, t in enumerate(ready):
+            if i not in fused_ids:
+                if t.kind == "xdma":
+                    t.value = _api._lowered(t.desc, self.interpret)(inputs[i])
+                else:
+                    t.value = t.fn(*(self._resolve(a) for a in t.inputs))
+            if t.nbytes is None:
+                t.nbytes = (_nbytes(inputs[i]) + _nbytes(t.value)
+                            if t.kind == "xdma" else 0)
+            t.done = True
+            t.round = self._rounds
+            self._heads[t.resource] += 1
+        self._rounds += 1
+
+    def step(self) -> bool:
+        """Run one scheduling round; returns False when nothing is pending."""
+        ready = self._ready_heads()
+        if not ready:
+            if self.pending:
+                raise ValueError(
+                    f"scheduler deadlocked with {self.pending} pending tasks "
+                    "(dependency cycle across FIFOs?)")
+            return False
+        self._dispatch_round(ready)
+        return True
+
+    def flush(self) -> None:
+        """Drain every FIFO (runs scheduling rounds until idle)."""
+        while self.step():
+            pass
+
+    @property
+    def pending(self) -> int:
+        return sum(1 for t in self._tasks.values() if not t.done)
+
+    # -- replay --------------------------------------------------------------
+    def sim_tasks(self) -> List[SimTask]:
+        """The recorded schedule as simulator tasks (submission order)."""
+        out = []
+        for tid in sorted(self._tasks):
+            t = self._tasks[tid]
+            out.append(SimTask(id=t.id, resource=t.resource,
+                               nbytes=int(t.nbytes or 0), deps=t.deps,
+                               cost_s=t.cost_s, label=t.label))
+        return out
+
+    def report(self) -> SimReport:
+        """Deterministic replay of everything dispatched so far."""
+        return simulate(self.sim_tasks(), self.topology)
+
+    def summary(self) -> str:
+        lines = [f"DistributedScheduler({self.name!r}, "
+                 f"{len(self._tasks)} tasks, {self._rounds} rounds)"]
+        for res, q in self._fifos.items():
+            if q:
+                lines.append(f"  {res}: {len(q)} tasks "
+                             f"({self._heads.get(res, 0)} dispatched)")
+        return "\n".join(lines)

@@ -1,0 +1,233 @@
+"""Link topology: the graph of half-XDMA endpoints the runtime schedules over.
+
+Paper §II: every *link* owns its own pair of half-XDMAs, so independent
+movements on disjoint links proceed concurrently — the Controller's job is to
+keep every link saturated.  This module is the static description of that
+fabric: nodes are device memories (the half-XDMA attachment points, e.g. the
+per-device HBMs of a ``launch/mesh.py`` mesh, or a host DRAM), edges are
+:class:`Link`\\ s with a bandwidth / latency / width cost model.
+
+The topology is pure Python with no JAX dependency: the scheduler uses it to
+route tasks onto per-link FIFOs, and the simulator replays schedules against
+its cost model to produce deterministic Fig. 4-style utilization numbers.
+
+Presets:
+
+* :meth:`Topology.ring` — an n-device unidirectional (or bidirectional) ring,
+  the classic ICI neighbour-exchange fabric.
+* :meth:`Topology.tpu_mesh` — a 2D/3D torus over a device grid; accepts a
+  ``jax.sharding.Mesh`` (nodes = its device memories) or a plain shape tuple.
+* :meth:`Topology.host_device` — host DRAM <-> device HBM with ``n`` DMA link
+  pairs (``h2d{i}`` / ``d2h{i}``), the staging/KV-movement fabric.
+* :meth:`Topology.parallel` — ``n`` parallel links between two memories (the
+  multi-lane a2a fabric the MoE dispatch chunks over).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["Link", "Topology", "DEFAULT_BANDWIDTH", "DEFAULT_LATENCY"]
+
+# Defaults sized like one ICI link: ~100 GB/s, ~1 us hop latency, 512-bit beats.
+DEFAULT_BANDWIDTH = 100e9       # bytes / second
+DEFAULT_LATENCY = 1e-6          # seconds
+DEFAULT_WIDTH = 64              # bytes per beat (512-bit link)
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """One directed link between two memories, owned by a half-XDMA pair.
+
+    ``bandwidth`` is bytes/s, ``latency`` the per-task fixed cost (CFG + first
+    beat), ``width`` the beat size in bytes (transfers are rounded up to whole
+    beats, the hardware burst granularity).
+    """
+
+    name: str
+    src: str
+    dst: str
+    bandwidth: float = DEFAULT_BANDWIDTH
+    latency: float = DEFAULT_LATENCY
+    width: int = DEFAULT_WIDTH
+
+    def __post_init__(self):
+        if self.bandwidth <= 0:
+            raise ValueError(f"link {self.name!r}: bandwidth must be > 0")
+        if self.latency < 0:
+            raise ValueError(f"link {self.name!r}: latency must be >= 0")
+        if self.width < 1:
+            raise ValueError(f"link {self.name!r}: width must be >= 1")
+
+    def transfer_time(self, nbytes: int) -> float:
+        """Deterministic cost model: latency + beat-rounded payload time."""
+        beats = -(-max(0, int(nbytes)) // self.width)       # ceil division
+        return self.latency + (beats * self.width) / self.bandwidth
+
+    def summary(self) -> str:
+        return (f"{self.name}: {self.src}->{self.dst} "
+                f"{self.bandwidth / 1e9:.0f}GB/s +{self.latency * 1e6:.1f}us")
+
+
+class Topology:
+    """A named graph of memories (nodes) and links (directed edges)."""
+
+    def __init__(self, name: str = "topo"):
+        self.name = name
+        self._nodes: Dict[str, str] = {}            # name -> kind
+        self._links: Dict[str, Link] = {}           # insertion-ordered
+
+    # -- construction --------------------------------------------------------
+    def add_node(self, name: str, kind: str = "memory") -> str:
+        existing = self._nodes.get(name)
+        if existing is not None and existing != kind:
+            raise ValueError(f"node {name!r} already registered as {existing!r}")
+        self._nodes[name] = kind
+        return name
+
+    def add_link(self, src: str, dst: str, *, name: Optional[str] = None,
+                 bandwidth: float = DEFAULT_BANDWIDTH,
+                 latency: float = DEFAULT_LATENCY,
+                 width: int = DEFAULT_WIDTH) -> Link:
+        self.add_node(src)
+        self.add_node(dst)
+        if name is None:
+            name = f"{src}->{dst}"
+        if name in self._links:
+            raise ValueError(f"duplicate link name {name!r}")
+        link = Link(name=name, src=src, dst=dst, bandwidth=bandwidth,
+                    latency=latency, width=width)
+        self._links[name] = link
+        return link
+
+    # -- queries -------------------------------------------------------------
+    @property
+    def nodes(self) -> Tuple[str, ...]:
+        return tuple(self._nodes)
+
+    @property
+    def links(self) -> Tuple[Link, ...]:
+        return tuple(self._links.values())
+
+    @property
+    def link_names(self) -> Tuple[str, ...]:
+        return tuple(self._links)
+
+    def __contains__(self, link_name: str) -> bool:
+        return link_name in self._links
+
+    def link(self, name: str) -> Link:
+        try:
+            return self._links[name]
+        except KeyError:
+            raise KeyError(f"no link {name!r} in topology {self.name!r} "
+                           f"(links: {list(self._links)})") from None
+
+    def links_between(self, src: str, dst: str) -> Tuple[Link, ...]:
+        return tuple(l for l in self._links.values()
+                     if l.src == src and l.dst == dst)
+
+    def links_from(self, src: str) -> Tuple[Link, ...]:
+        return tuple(l for l in self._links.values() if l.src == src)
+
+    def neighbors(self, node: str) -> Tuple[str, ...]:
+        seen: List[str] = []
+        for l in self._links.values():
+            if l.src == node and l.dst not in seen:
+                seen.append(l.dst)
+        return tuple(seen)
+
+    @property
+    def total_bandwidth(self) -> float:
+        return sum(l.bandwidth for l in self._links.values())
+
+    def summary(self) -> str:
+        lines = [f"Topology({self.name!r}, {len(self._nodes)} nodes, "
+                 f"{len(self._links)} links)"]
+        lines += [f"  {l.summary()}" for l in self._links.values()]
+        return "\n".join(lines)
+
+    # -- presets -------------------------------------------------------------
+    @classmethod
+    def ring(cls, n: int, *, bidirectional: bool = False,
+             bandwidth: float = DEFAULT_BANDWIDTH,
+             latency: float = DEFAULT_LATENCY,
+             width: int = DEFAULT_WIDTH) -> "Topology":
+        """n devices in a ring: dev{i} -> dev{(i+1)%n} (both ways if asked)."""
+        if n < 2:
+            raise ValueError("ring needs >= 2 devices")
+        topo = cls(name=f"ring{n}")
+        for i in range(n):
+            j = (i + 1) % n
+            topo.add_link(f"dev{i}", f"dev{j}", bandwidth=bandwidth,
+                          latency=latency, width=width)
+            if bidirectional:
+                topo.add_link(f"dev{j}", f"dev{i}", bandwidth=bandwidth,
+                              latency=latency, width=width)
+        return topo
+
+    @classmethod
+    def tpu_mesh(cls, mesh_or_shape, *, bandwidth: float = DEFAULT_BANDWIDTH,
+                 latency: float = DEFAULT_LATENCY,
+                 width: int = DEFAULT_WIDTH) -> "Topology":
+        """Torus links over a device grid.
+
+        Accepts a ``jax.sharding.Mesh`` (e.g. from
+        ``launch.mesh.make_production_mesh``) — nodes are its device memories,
+        named by grid coordinate — or a plain shape tuple.  Each grid axis of
+        size > 1 contributes a +1-neighbour torus link per device (wrapping),
+        which is the ICI wiring of a TPU pod slice.
+        """
+        shape = getattr(mesh_or_shape, "devices", None)
+        if shape is not None:                       # a Mesh: use its grid
+            shape = tuple(mesh_or_shape.devices.shape)
+        else:
+            shape = tuple(int(s) for s in mesh_or_shape)
+        if not shape or any(s < 1 for s in shape):
+            raise ValueError(f"bad mesh shape {shape}")
+        topo = cls(name=f"tpu_mesh{'x'.join(map(str, shape))}")
+
+        def node(coord):
+            return "dev(" + ",".join(map(str, coord)) + ")"
+
+        for coord in itertools.product(*(range(s) for s in shape)):
+            topo.add_node(node(coord))
+            for ax, size in enumerate(shape):
+                if size < 2:
+                    continue
+                nxt = list(coord)
+                nxt[ax] = (coord[ax] + 1) % size
+                topo.add_link(node(coord), node(tuple(nxt)),
+                              name=f"ici{ax}:{node(coord)}",
+                              bandwidth=bandwidth, latency=latency, width=width)
+        return topo
+
+    @classmethod
+    def host_device(cls, n: int = 1, *, bandwidth: float = DEFAULT_BANDWIDTH / 4,
+                    latency: float = 4 * DEFAULT_LATENCY,
+                    width: int = DEFAULT_WIDTH) -> "Topology":
+        """Host DRAM <-> device HBM with n DMA link pairs (h2d{i}/d2h{i})."""
+        if n < 1:
+            raise ValueError("host_device needs >= 1 link pair")
+        topo = cls(name=f"host_device{n}")
+        for i in range(n):
+            topo.add_link("host", "dev", name=f"h2d{i}", bandwidth=bandwidth,
+                          latency=latency, width=width)
+            topo.add_link("dev", "host", name=f"d2h{i}", bandwidth=bandwidth,
+                          latency=latency, width=width)
+        return topo
+
+    @classmethod
+    def parallel(cls, n: int, *, src: str = "memA", dst: str = "memB",
+                 prefix: str = "link", bandwidth: float = DEFAULT_BANDWIDTH,
+                 latency: float = DEFAULT_LATENCY,
+                 width: int = DEFAULT_WIDTH) -> "Topology":
+        """n parallel links between two memories (multi-lane fabric)."""
+        if n < 1:
+            raise ValueError("parallel needs >= 1 link")
+        topo = cls(name=f"parallel{n}")
+        for i in range(n):
+            topo.add_link(src, dst, name=f"{prefix}{i}", bandwidth=bandwidth,
+                          latency=latency, width=width)
+        return topo

@@ -13,6 +13,13 @@ All movements go through the unified :func:`repro.core.api.transfer` entry
 point: each workload is one descriptor (built once per call signature, the
 CFG phase), and the store+load roundtrip is expressible as an
 :class:`~repro.core.api.XDMAQueue` (see :func:`kv_roundtrip_queue`).
+
+With the distributed runtime (DESIGN.md §6) the roundtrip also schedules
+*across links*: :func:`kv_roundtrips_overlapped` puts stores on the ``h2d``
+link and loads on the ``d2h`` link of a
+:class:`~repro.runtime.topology.Topology`, so shard i+1's store overlaps
+shard i's load — per-shard ordering is kept by the future dependency, link
+concurrency comes from the per-link FIFOs.
 """
 from __future__ import annotations
 
@@ -77,6 +84,39 @@ def kv_roundtrip_queue(dtype=jnp.float32, *, d_buf: int = 9,
         _store_desc(jnp.dtype(dtype).name, d_buf, eps),
         _load_desc(tm, tn, d_buf),
     ], name="kv_roundtrip")
+
+
+# -- distributed runtime: store/load overlapped across links -----------------
+def kv_roundtrips_overlapped(kvs: Sequence[jnp.ndarray], *, scheduler=None,
+                             d_buf: int = 9, eps: float = 1e-6):
+    """Store+load every KV shard with stores and loads on *separate links*.
+
+    ``kvs`` is a sequence of (B, S, KV, hd) cache shards.  Each shard's store
+    (norm+tile, ``h2d0``) and load (transpose, ``d2h0``) keep their in-order
+    dependency, but because the two tasks live on different link FIFOs the
+    store of shard i+1 overlaps the load of shard i — the distributed
+    half-XDMA pipelining of paper §II.  Returns ``(outs, scheduler)``; outs
+    are bit-identical to ``kv_load_transposed(kv_prefill_store(kv))`` per
+    shard, and ``scheduler.report()`` gives the simulated timeline.
+    """
+    from repro.runtime import DistributedScheduler, Topology
+
+    if scheduler is None:
+        scheduler = DistributedScheduler(Topology.host_device(1),
+                                         name="kv_roundtrip")
+    names = scheduler.topology.link_names
+    store_link, load_link = names[0], names[1 % len(names)]
+    futures = []
+    for kv in kvs:
+        mat, _ = _as_matrix(kv)
+        desc_s = _store_desc(jnp.dtype(mat.dtype).name, d_buf, eps)
+        f_store = scheduler.submit(mat, desc_s, link=store_link, label="kv_store")
+        tile = layout_for_dtype(mat.dtype).tile
+        f_load = scheduler.submit(f_store, _load_desc(tile[0], tile[1], d_buf),
+                                  link=load_link, label="kv_load")
+        futures.append(f_load)
+    scheduler.flush()
+    return [f.result() for f in futures], scheduler
 
 
 @functools.lru_cache(maxsize=None)

@@ -170,6 +170,50 @@ def test_distinct_descriptors_get_distinct_cfg_entries():
     assert xdma.cache_stats().misses == 2
 
 
+def test_structurally_equal_descriptors_share_one_cfg_entry():
+    """Plugins hash structurally (frozen dataclasses), so two independently
+    built but identical descriptors run one CFG phase, not two."""
+    xdma.clear_cache()
+    x = rand((64, 128))
+    xdma.transfer(x, C.describe("MN", "MNM8N128", C.Scale(2.0)))
+    xdma.transfer(x, C.describe("MN", "MNM8N128", C.Scale(2.0)))
+    stats = xdma.cache_stats()
+    assert stats.misses == 1 and stats.hits == 1
+    # a different parameterization is a different CFG
+    xdma.transfer(x, C.describe("MN", "MNM8N128", C.Scale(3.0)))
+    assert xdma.cache_stats().misses == 2
+
+
+def test_cfg_cache_lru_eviction_is_bounded_and_counted():
+    d1 = C.describe("MN", "MNM8N128")
+    d2 = C.describe("MN", "MN", C.Scale(2.0))
+    d3 = C.describe("MN", "MN", C.BiasAdd(1.0))
+    x = rand((64, 128))
+    old_capacity = xdma.cache_capacity()
+    xdma.clear_cache()
+    try:
+        xdma.set_cache_capacity(2)
+        xdma.transfer(x, d1)
+        xdma.transfer(x, d2)
+        xdma.transfer(x, d1)                    # refresh d1: d2 becomes LRU
+        xdma.transfer(x, d3)                    # evicts d2
+        stats = xdma.cache_stats()
+        assert stats.size == 2 and stats.evictions == 1
+        xdma.transfer(x, d1)                    # survived (was refreshed)
+        assert xdma.cache_stats().hits == 2
+        xdma.transfer(x, d2)                    # was evicted: a fresh miss
+        assert xdma.cache_stats().misses == 4
+        assert xdma.cache_stats().evictions == 2    # ... evicting d3 in turn
+        # shrinking the capacity evicts immediately
+        xdma.set_cache_capacity(1)
+        assert xdma.cache_stats().size == 1
+        with pytest.raises(ValueError):
+            xdma.set_cache_capacity(0)
+    finally:
+        xdma.set_cache_capacity(old_capacity)
+        xdma.clear_cache()
+
+
 # -- XDMAQueue: the Controller's in-order task dispatch ----------------------
 def test_queue_ordering_semantics():
     x = rand((8, 128))
@@ -206,6 +250,58 @@ def test_queue_submit_order_and_contracts():
     assert q.out_dtype(jnp.float32) == jnp.bfloat16
     with pytest.raises(TypeError):
         q.submit("not-a-descriptor")
+
+
+def test_queue_empty_run_is_the_identity():
+    q = C.XDMAQueue(name="empty")
+    x = rand((4, 8))
+    assert q.run(x) is x                        # no task, no copy, no trace
+    assert q.out_logical_shape((4, 8)) == (4, 8)
+    assert q.out_dtype(jnp.bfloat16) == jnp.bfloat16
+
+
+def test_queue_run_task_with_interleaved_compute_matches_fused_run():
+    """Dispatching task-at-a-time with compute between tasks (the MoE
+    dispatch -> FFN -> return shape) is bit-identical to the fused chain."""
+    from jax import lax
+    x = rand((256, 512))
+    q = C.XDMAQueue([C.describe("MN", "MNM8N128", C.RMSNormPlugin()),
+                     C.describe("MNM8N128", "MN", C.Transpose()),
+                     C.describe("MN", "MN", C.Scale(0.5))])
+    step = x
+    for i in range(len(q)):
+        step = q.run_task(step, i)
+        # value-preserving interleaved "compute" that XLA cannot fuse away
+        step = lax.optimization_barrier(step)
+        jax.block_until_ready(step)
+    np.testing.assert_array_equal(np.asarray(step), np.asarray(q.run(x)))
+
+
+def test_queue_mixed_local_remote_falls_back_to_unfused_chain():
+    peer = Endpoint.peer("x", tuple((i, (i + 1) % 8) for i in range(8)))
+    q = C.XDMAQueue([C.describe("MN", "MN", C.Scale(2.0)),
+                     C.describe(C.MN, peer)], name="mixed")
+    assert not q.is_local                       # remote task: no fused jit
+    out = run_multidevice(_REMOTE_PRELUDE + """
+x = jnp.asarray(np.random.default_rng(5).standard_normal((8, 16, 128)), jnp.float32)
+perm = tuple((i, (i+1) % 8) for i in range(8))
+q = C.XDMAQueue([C.describe('MN', 'MN', C.Scale(2.0)),
+                 C.describe(C.MN, Endpoint.peer('x', perm))], name='mixed')
+assert not q.is_local
+run = shard_map_compat(lambda xs: q.run(xs), mesh, PS('x'), PS('x'))(x)
+def chain(xs):
+    v = xs
+    for i in range(len(q)):
+        v = q.run_task(v, i)
+    return v
+stepped = shard_map_compat(chain, mesh, PS('x'), PS('x'))(x)
+np.testing.assert_array_equal(np.asarray(run), np.asarray(stepped))
+np.testing.assert_allclose(np.asarray(run),
+                           np.asarray(jnp.roll(2.0 * x, 1, axis=0)),
+                           rtol=1e-6)
+print('OK')
+""")
+    assert "OK" in out
 
 
 # -- serving + data call sites ride the new surface --------------------------
@@ -302,6 +398,17 @@ plain = shard_map_compat(lambda gs: xdma.transfer(gs[0], desc3)[None],
                          mesh, PS('x'), PS('x'))(g)
 np.testing.assert_allclose(np.asarray(plain[0]), np.asarray(g.sum(0) + 1.0),
                            rtol=1e-5, atol=1e-5)
+# a Dequantize with no matching pre Quantize is not a wire codec: it stays on
+# the post host and fails loudly instead of being silently dropped
+desc4 = C.describe(Endpoint.local(C.MN), Endpoint.reduce('x', axis_size=8),
+                   post=(C.Dequantize(jnp.bfloat16),))
+try:
+    shard_map_compat(lambda gs: xdma.transfer(gs[0], desc4)[None],
+                     mesh, PS('x'), PS('x'))(g)
+except Exception:
+    pass
+else:
+    raise AssertionError('orphan Dequantize was silently dropped')
 print('OK')
 """)
     assert "OK" in out
