@@ -1,0 +1,97 @@
+"""Plugin-fusion benchmark: the compiled single-kernel datapath vs its parts.
+
+The plugin compiler (DESIGN.md §7) lowers ``reader -> chain -> writer`` into
+one ``pallas_call``; the unfused baseline runs the same chain as one
+separately-jitted program *per stage* (reader/relayout, each plugin, writer)
+with an HBM round-trip between programs — what a plugin host outside the
+datapath would cost.  The fused-XLA composition (one jitted program, XLA
+does the fusing) sits in between and is the compiler's fallback.
+
+Rows: ``fusion_<case>_{compiled,fusedxla,staged},us_per_call,speedup-vs-staged``
+— ``--sim`` prints the rows with CFG-derived byte volumes and no timing
+(the CI smoke / CSV-artifact mode; Compress rows also report the wire-byte
+ratio its occupancy mask buys).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as C
+from repro.core import plugins as P
+from repro.core import xdma
+
+SHAPE = (512, 512)
+
+CASES: List[Tuple[str, str, str, Tuple[P.Plugin, ...]]] = [
+    ("rmsnorm_store", "MN", "MNM8N128", (P.RMSNormPlugin(), P.Scale(2.0))),
+    ("load_transpose_bias", "MNM8N128", "MN", (P.BiasAdd(0.5), P.Transpose())),
+    ("gather_permute", "MN", "MN",
+     (P.GatherScatter(indices=np.arange(SHAPE[0] - 1, -1, -1)),)),
+    ("compress_store", "MN", "MNM8N128", (P.Compress(block_rows=8),)),
+]
+
+
+def _staged(desc: C.XDMADescriptor) -> Callable:
+    """One jitted program per stage: every stage boundary is an HBM trip."""
+    stages = [jax.jit(lambda v, _l=desc.src.layout: _l.to_logical(v))]
+    for p in desc.plugins:
+        stages.append(jax.jit(p.__call__))
+    def write(v):
+        if isinstance(v, P.CTensor):
+            return P.CTensor(values=desc.dst.layout.from_logical(v.values),
+                             mask=v.mask)
+        return desc.dst.layout.from_logical(v)
+    stages.append(jax.jit(write))
+
+    def run(x):
+        for s in stages:
+            x = s(x)
+        return x
+    return run
+
+
+def _time(fn, x, iters: int = 20) -> float:
+    jax.block_until_ready(fn(x))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(x))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(sim: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    for name, src, dst, chain in CASES:
+        logical = rng.standard_normal(SHAPE).astype(np.float32)
+        logical[: SHAPE[0] // 2] = 0.0            # blocks for Compress to skip
+        x = jnp.asarray(C.by_name(src).from_logical(logical))
+        desc = C.describe(src, dst, *chain)
+        if sim:
+            # CFG-derived volumes only (deterministic CI smoke): report the
+            # dense payload and, for compressing chains, the wire bytes the
+            # occupancy mask buys.
+            nbytes = x.size * x.dtype.itemsize
+            # wire accounting runs on the logical (pre-writer) payload — the
+            # occupancy mask indexes logical row blocks
+            out = P.apply_chain(desc.plugins,
+                                C.by_name(src).to_logical(x))
+            wire = out.wire_nbytes() if isinstance(out, P.CTensor) else nbytes
+            print(f"fusion_{name}_sim,0.0,{nbytes / max(1, wire):.2f}")
+            continue
+        compiled = _time(lambda v: xdma.transfer(v, desc), x)
+        fused = _time(lambda v, _d=C.describe(src, dst, *chain,
+                                              backend="fused"):
+                      xdma.transfer(v, _d), x)
+        staged = _time(_staged(desc), x)
+        print(f"fusion_{name}_compiled,{compiled * 1e6:.1f},{staged / compiled:.2f}")
+        print(f"fusion_{name}_fusedxla,{fused * 1e6:.1f},{staged / fused:.2f}")
+        print(f"fusion_{name}_staged,{staged * 1e6:.1f},1.00")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -8,8 +8,11 @@ dry-run-derived rows).
 
 Sections live in one registry: adding a benchmark module here is the single
 step that wires it into ``--only``, ``--list``, and the default full run.
-``--sim`` asks sections that support it (``sched``) to use the deterministic
-simulator only, executing nothing — the CI smoke mode.
+``--sim`` asks sections that support it (``fusion``, ``sched``) to use the
+deterministic simulator only, executing nothing — the CI smoke mode.  In a
+full ``--sim`` sweep, sections with no simulator mode are *skipped* (a smoke
+run must stay cheap); ``--only SECTION --sim`` still runs that section for
+real if it has no sim mode.
 """
 import argparse
 import importlib
@@ -20,18 +23,24 @@ SECTIONS = {
     "fig4": ("link_utilization", "paper Fig.4 link utilization sweep"),
     "tableIII": ("kv_cache", "paper Table III KV-cache workloads"),
     "cfgcache": ("cfg_cache", "CFG-cache retrace overhead"),
+    "fusion": ("plugin_fusion", "compiled plugin datapath vs fused-XLA vs staged"),
     "sched": ("sched", "distributed scheduler vs in-order queue (multi-link)"),
     "roofline": ("roofline", "dry-run roofline fractions"),
 }
 
 
-def run_section(name: str, *, sim: bool = False) -> None:
+def _supports_sim(name: str):
     module_name, _ = SECTIONS[name]
     module = importlib.import_module(f".{module_name}", package=__package__)
-    kwargs = {}
-    if "sim" in inspect.signature(module.run).parameters:
-        kwargs["sim"] = sim
-    module.run(**kwargs)
+    return module, "sim" in inspect.signature(module.run).parameters
+
+
+def run_section(name: str, *, sim: bool = False, skip_unsimulated: bool = False) -> None:
+    module, has_sim = _supports_sim(name)
+    if sim and skip_unsimulated and not has_sim:
+        print(f"# {name}: no simulator mode, skipped in --sim sweep")
+        return
+    module.run(**({"sim": sim} if has_sim else {}))
 
 
 def main() -> None:
@@ -51,7 +60,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in SECTIONS:
         if args.only in (None, name):
-            run_section(name, sim=args.sim)
+            run_section(name, sim=args.sim, skip_unsimulated=args.only is None)
 
 
 if __name__ == '__main__':

@@ -6,6 +6,8 @@ from .layouts import (  # noqa: F401
 from .plugins import (  # noqa: F401
     Plugin, Identity, Transpose, Cast, Scale, BiasAdd,
     RMSNormPlugin, Quantize, Dequantize, QTensor, apply_chain,
+    GatherScatter, Compress, Decompress, CTensor, ReduceStage,
+    register_plugin, plugin_by_name, registered_plugins,
 )
 from .descriptor import Endpoint, XDMADescriptor, describe  # noqa: F401
 from .engine import xdma_copy, xdma_copy_jit, xdma_copy_pallas, reader, writer  # noqa: F401
@@ -18,3 +20,4 @@ from .api import (  # noqa: F401
 )
 from . import api as xdma  # noqa: F401  (usage: from repro.core import xdma)
 from . import baselines  # noqa: F401
+from . import plugin_compiler  # noqa: F401  (cfg_stats, compile_local, ...)

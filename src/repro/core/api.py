@@ -6,11 +6,17 @@ in order.  This module is that Controller.  :func:`transfer` consumes a
 :class:`~repro.core.descriptor.XDMADescriptor` and dispatches — *from the
 descriptor alone* — to one of the lowering backends:
 
-* local + backend auto/fused  -> ``engine.xdma_copy``   (fused XLA stream)
+* local + backend auto        -> one fused Pallas kernel when the plugin
+  chain is emit-capable (``plugin_compiler``), else ``engine.xdma_copy``
+* local + backend fused       -> ``engine.xdma_copy``   (fused XLA stream)
+* local + backend compiled    -> ``plugin_compiler.compile_local`` (forced)
 * local + backend pallas      -> ``engine.xdma_copy_pallas`` (TPU kernel)
 * dst peer                    -> ``remote.xdma_ppermute``    (tunnel)
 * dst all_to_all              -> ``remote.xdma_all_to_all``  (MoE dispatch)
 * dst reduce                  -> ``remote.compressed_psum`` / ``lax.psum``
+
+Remote movements additionally compile each endpoint side's chain into a
+single Pallas kernel when possible (``plugin_compiler.maybe_compile_side``).
 
 The CFG phase happens **once per descriptor**: the lowered callable is built
 and (for local movements) jitted on first use, then cached by descriptor
@@ -32,6 +38,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from . import engine
+from . import plugin_compiler
 from . import plugins as P
 from . import remote
 from .descriptor import Endpoint, XDMADescriptor
@@ -96,6 +103,19 @@ def clear_cache() -> None:
     _STATS.evictions = 0
 
 
+def _compiled_or(desc: XDMADescriptor, interpret: bool,
+                 compiled: Optional[Callable]) -> Callable:
+    """Compiled fused kernel with a structural escape hatch: payload pytrees
+    (QTensor/CTensor inputs) re-enter through the XLA composition, which
+    handles them natively.  The branch is on pytree structure, so it is
+    jit-stable."""
+    def run(x):
+        if compiled is None or isinstance(x, (P.QTensor, P.CTensor)):
+            return engine.xdma_copy(x, desc)
+        return compiled(x)
+    return jax.jit(run)
+
+
 def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
     """Build the Data-phase callable for a descriptor (the CFG phase)."""
     movement = desc.movement
@@ -104,25 +124,58 @@ def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
             def run(x):
                 return engine.xdma_copy_pallas(x, desc, interpret=interpret)
             return run
+        if desc.backend == "compiled":
+            # forced single-kernel lowering: raises on non-fusible chains
+            return jax.jit(plugin_compiler.compile_local(desc,
+                                                         interpret=interpret))
+        if desc.backend == "auto":
+            # plugin-compiler policy: fuse emit-capable plugin chains into
+            # one Pallas kernel; everything else keeps the XLA composition
+            # (see plugin_compiler.cfg_stats() for the fused/fallback tally)
+            compiled = plugin_compiler.maybe_compile_local(desc,
+                                                           interpret=interpret)
+            if compiled is not None:
+                return _compiled_or(desc, interpret, compiled)
         # fused path: jit here so repeated transfers share one executable
         return jax.jit(lambda x: engine.xdma_copy(x, desc))
 
     # Remote movements run inside the caller's shard_map/jit: lower to a
     # plain callable (reader -> pre host -> link -> post host -> writer).
+    # Each endpoint side with a fully emit-capable chain is compiled into a
+    # single Pallas kernel (reader+pre / post+writer); other sides keep the
+    # composition the remote backends apply around the collective.
     ep = desc.remote
+    src_side = dst_side = None
+    if movement in ("peer", "all_to_all"):
+        src_side = plugin_compiler.maybe_compile_side(
+            desc.src.layout, desc.pre, side="src", d_buf=desc.d_buf,
+            interpret=interpret)
+        dst_side = plugin_compiler.maybe_compile_side(
+            desc.dst.layout, desc.post, side="dst", d_buf=desc.d_buf,
+            interpret=interpret)
 
     def run_remote(x):
-        logical = engine.reader(x, desc.src.layout)
-        if logical.ndim >= 2:       # reduce accepts flat payloads (psum-like)
-            desc.validate(logical.shape)
+        fuse_src = (src_side is not None
+                    and not isinstance(x, (P.QTensor, P.CTensor)))
+        if fuse_src and len(x.shape) >= 2:   # reduce-style flat payloads skip
+            desc.validate(desc.src.layout.logical_shape(x.shape))
+        if fuse_src:
+            logical = src_side(x)            # one kernel: reader + pre chain
+            pre = ()
+        else:
+            logical = engine.reader(x, desc.src.layout)
+            pre = desc.pre
+            if getattr(logical, "ndim", 0) >= 2:
+                desc.validate(logical.shape)
+        post = desc.post if dst_side is None else ()
         if movement == "peer":
             y = remote.xdma_ppermute(logical, ep.axis, list(ep.perm),
-                                     pre=desc.pre, post=desc.post)
+                                     pre=pre, post=post)
         elif movement == "all_to_all":
             y = remote.xdma_all_to_all(logical, ep.axis,
                                        split_axis=ep.split_axis,
                                        concat_axis=ep.concat_axis,
-                                       pre=desc.pre, post=desc.post)
+                                       pre=pre, post=post)
         elif movement == "reduce":
             # A Quantize/Dequantize pair around the link is the wire codec:
             # compressed_psum owns it (its two-phase decomposition re-quantizes
@@ -146,9 +199,16 @@ def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
             y = P.apply_chain(post_rest, y)
         else:  # pragma: no cover - movement is validated by the descriptor
             raise ValueError(f"unknown movement {movement!r}")
+        if movement in ("peer", "all_to_all") and dst_side is not None:
+            if not isinstance(y, (P.QTensor, P.CTensor)):
+                return dst_side(y)           # one kernel: post chain + writer
+            y = P.apply_chain(desc.post, y)  # pytree payload: composition
         if isinstance(y, P.QTensor):
             return P.QTensor(values=engine.writer(y.values, desc.dst.layout),
                              scales=y.scales)
+        if isinstance(y, P.CTensor):
+            return P.CTensor(values=engine.writer(y.values, desc.dst.layout),
+                             mask=y.mask)
         return engine.writer(y, desc.dst.layout)
 
     return run_remote

@@ -122,6 +122,9 @@ class XDMADescriptor:
     :class:`Endpoint`\\ s and ``plugins`` lands on the ``pre`` host.  The
     ``plugins`` attribute is always normalized to ``pre + post`` (the full
     on-stream cascade), which is what the local engine fuses.
+    ``dataclasses.replace`` works for non-chain fields as-is (the normalized
+    ``plugins`` rides along consistently); to replace the chain itself, pass
+    ``plugins=()`` alongside the new ``pre=``/``post=``.
     """
 
     src_layout: Optional[L.Layout] = None    # legacy; folded into .src
@@ -133,7 +136,7 @@ class XDMADescriptor:
     dst: Optional[Endpoint] = None
     pre: Tuple[P.Plugin, ...] = ()           # src-side pre-writer host
     post: Tuple[P.Plugin, ...] = ()          # dst-side post-reader host
-    backend: str = "auto"                    # auto | fused | pallas
+    backend: str = "auto"                    # auto | fused | pallas | compiled
 
     def __post_init__(self):
         set_ = lambda k, v: object.__setattr__(self, k, v)
@@ -141,9 +144,16 @@ class XDMADescriptor:
         dst = self.dst or Endpoint.local(self.dst_layout or L.MN)
         pre, post = tuple(self.pre), tuple(self.post)
         if self.plugins and (pre or post):
-            raise ValueError("pass the chain via plugins= (legacy) or "
-                             "pre=/post= (endpoint-aware), not both")
-        if self.plugins:
+            # ``plugins`` is always normalized to pre+post, so a round-trip
+            # through dataclasses.replace() sees all three populated — accept
+            # the consistent case, reject a genuinely mixed spelling.
+            if tuple(self.plugins) != pre + post:
+                raise ValueError(
+                    "pass the chain via plugins= (legacy) or pre=/post= "
+                    "(endpoint-aware), not both; to change a chain with "
+                    "dataclasses.replace, pass plugins=() alongside the new "
+                    "pre=/post=")
+        elif self.plugins:
             pre = tuple(self.plugins)        # legacy chain = pre-writer host
         set_("src", src)
         set_("dst", dst)
@@ -155,10 +165,10 @@ class XDMADescriptor:
         if src.is_remote and dst.is_remote:
             raise ValueError("at most one endpoint may be remote "
                              f"({src.summary()} -> {dst.summary()})")
-        if self.backend not in ("auto", "fused", "pallas"):
+        if self.backend not in ("auto", "fused", "pallas", "compiled"):
             raise ValueError(f"unknown backend {self.backend!r}")
-        if self.backend == "pallas" and self.movement != _LOCAL:
-            raise ValueError("pallas backend only lowers local movements")
+        if self.backend in ("pallas", "compiled") and self.movement != _LOCAL:
+            raise ValueError(f"{self.backend} backend only lowers local movements")
 
     # -- movement classification --------------------------------------------
     @property

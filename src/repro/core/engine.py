@@ -47,13 +47,24 @@ def xdma_copy(x: jnp.ndarray, desc: XDMADescriptor) -> jnp.ndarray:
     ``x`` is the *physical* source buffer.  Returns the *physical* destination
     buffer.  Pure function of (x, desc); jit-stable because desc is static.
     """
-    logical = reader(x, desc.src_layout)
+    if isinstance(x, P.CTensor):
+        # compressed carrier in this memory: relayout the dense values, keep
+        # the mask side-channel on the stream (Decompress consumes it)
+        logical = P.CTensor(values=reader(x.values, desc.src_layout),
+                            mask=x.mask)
+    else:
+        logical = reader(x, desc.src_layout)
     desc.validate(logical.shape)
     logical = P.apply_chain(desc.plugins, logical)
     if isinstance(logical, P.QTensor):
         # Quantized payload: write values tiled, scales ride along row-major.
         return P.QTensor(values=writer(logical.values, desc.dst_layout),
                          scales=logical.scales)
+    if isinstance(logical, P.CTensor):
+        # Block-compressed payload: the dense carrier takes the dst layout,
+        # the occupancy mask rides along as the side-channel.
+        return P.CTensor(values=writer(logical.values, desc.dst_layout),
+                         mask=logical.mask)
     return writer(logical, desc.dst_layout)
 
 

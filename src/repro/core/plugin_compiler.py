@@ -1,0 +1,357 @@
+"""The XDMA plugin compiler: lower a descriptor's whole datapath into one
+Pallas kernel per endpoint side.
+
+Paper Fig. 2(c) puts the plugin hosts *inside* the reader -> writer datapath:
+data is manipulated while it streams, in a single hardware pass.  The plugin
+host composition in :mod:`repro.core.engine` trusts XLA to fuse the separate
+reader / plugin / writer ops; this module closes the remaining gap by
+compiling ``reader -> pre-chain -> post-chain -> writer`` (local movements)
+or ``reader -> pre-chain`` / ``post-chain -> writer`` (the two sides of a
+remote movement) into **one** ``pallas_call`` each, with the relayout stages
+of :mod:`repro.kernels.relayout` emitted as the first/last kernel stage and
+each plugin's :meth:`~repro.core.plugins.Plugin.emit` hook as a middle stage.
+
+Two kernel templates:
+
+* **streamed** — every plugin in the chain is row-local and shape-preserving
+  (``streaming=True``): the kernel walks the logical rows in ``d_buf``-deep
+  bursts exactly like the relayout kernels, so the stream-buffer depth of
+  paper Table II stays meaningful for plugin-carrying descriptors.
+* **block** — anything else that still has ``emit`` everywhere (transpose,
+  gather/scatter, compress, reduce): one grid step stages the whole logical
+  array through VMEM — still a single fused pass, no HBM round-trip between
+  stages.
+
+Any chain containing a plugin without ``emit`` (e.g. ``Quantize``, whose
+QTensor payload splits the stream) falls back to the fused-XLA composition —
+behaviour is identical by construction and enforced bitwise by the
+differential harness (``tests/test_differential.py``).  :func:`cfg_stats`
+reports how many CFG phases fused vs fell back, and why.
+"""
+from __future__ import annotations
+
+import collections
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import layouts as L
+from . import plugins as P
+from .descriptor import XDMADescriptor
+
+__all__ = ["can_fuse", "compile_local", "compile_side", "maybe_compile_local",
+           "maybe_compile_side", "cfg_stats", "clear_stats"]
+
+
+# -- fusion accounting (one event per CFG phase, not per Data phase) ---------
+_STATS = {"fused": 0, "fallback": 0}
+_REASONS: "collections.Counter[str]" = collections.Counter()
+
+
+def cfg_stats() -> Dict[str, Any]:
+    """Fused vs fallback CFG-phase counts, with per-reason fallback detail."""
+    return {"fused": _STATS["fused"], "fallback": _STATS["fallback"],
+            "reasons": dict(_REASONS)}
+
+
+def clear_stats() -> None:
+    _STATS["fused"] = 0
+    _STATS["fallback"] = 0
+    _REASONS.clear()
+
+
+def _record(fused: bool, reason: str = "") -> None:
+    if fused:
+        _STATS["fused"] += 1
+    else:
+        _STATS["fallback"] += 1
+        _REASONS[reason or "unknown"] += 1
+
+
+# -- fusibility --------------------------------------------------------------
+def _chain_fusible(chain: Sequence[P.Plugin]) -> Optional[str]:
+    """None when every plugin has an emit hook, else the fallback reason."""
+    for p in chain:
+        if not p.supports_emit:
+            return f"no-emit:{p.name}"
+    return None
+
+
+def can_fuse(desc: XDMADescriptor) -> Tuple[bool, str]:
+    """Whether the *local* datapath of ``desc`` compiles to one kernel.
+
+    This is the ``backend='auto'`` policy: plugin-carrying local movements
+    with a fully emit-capable chain fuse; empty chains keep the plain XLA
+    relayout (nothing to fuse into the datapath); anything else falls back.
+    """
+    if desc.movement != "local":
+        return False, f"movement:{desc.movement}"
+    chain = desc.pre + desc.post
+    if not chain:
+        return False, "empty-chain"
+    reason = _chain_fusible(chain)
+    if reason is not None:
+        return False, reason
+    return True, "fusible"
+
+
+# -- kernel construction -----------------------------------------------------
+def _read_stage(blk: jnp.ndarray, layout: L.Layout) -> jnp.ndarray:
+    from repro.kernels.relayout import untile_block
+    if not layout.is_tiled:
+        return blk
+    if blk.ndim == 4:
+        return untile_block(blk)
+    return layout.to_logical(blk)       # leading batch dims: layout algebra
+
+
+def _write_stage(v: jnp.ndarray, layout: L.Layout) -> jnp.ndarray:
+    from repro.kernels.relayout import tile_block
+    if not layout.is_tiled:
+        return v
+    if v.ndim == 2:
+        tm, tn = layout.tile
+        return tile_block(v, tm, tn)
+    return layout.from_logical(v)       # leading batch dims: layout algebra
+
+
+def _chain_consts(chain: Sequence[P.Plugin]) -> Tuple[Tuple[int, ...], Tuple[Any, ...]]:
+    """Per-plugin const counts + the flat const operand list (captured once
+    at CFG time, streamed into the kernel as extra inputs)."""
+    counts, flat = [], []
+    for p in chain:
+        cs = tuple(p.emit_consts())
+        counts.append(len(cs))
+        flat.extend(cs)
+    return tuple(counts), tuple(flat)
+
+
+def _emit_chain(v, chain, counts, const_vals):
+    ci = 0
+    for p, nc in zip(chain, counts):
+        v = p.emit(v, *const_vals[ci:ci + nc])
+        ci += nc
+    return v
+
+
+def _out_struct(in_aval, src_layout, chain):
+    """eval_shape of the logical composition: the kernel's output pytree."""
+    def f(x):
+        v = src_layout.to_logical(x)
+        return P.apply_chain(chain, v)
+    return jax.eval_shape(f, in_aval)
+
+
+def _physical_struct(struct, dst_layout):
+    """Physicalize the chain output: the primary payload leaf gets the dst
+    layout; side-channels (a CTensor mask) are written raw, exactly as the
+    XLA composition does."""
+    if isinstance(struct, P.CTensor):
+        v = struct.values
+        return [jax.ShapeDtypeStruct(dst_layout.physical_shape(v.shape), v.dtype),
+                jax.ShapeDtypeStruct(struct.mask.shape, struct.mask.dtype)]
+    return [jax.ShapeDtypeStruct(dst_layout.physical_shape(struct.shape),
+                                 struct.dtype)]
+
+
+def _pack_out(v, dst_layout):
+    """Chain output pytree -> ordered list of physical output blocks."""
+    if isinstance(v, P.CTensor):
+        return [_write_stage(v.values, dst_layout), v.mask]
+    return [_write_stage(v, dst_layout)]
+
+
+def _unpack_out(outs, struct):
+    return P.CTensor(*outs) if isinstance(struct, P.CTensor) else outs[0]
+
+
+def _compile_block(chain, src_layout, dst_layout, in_aval, interpret):
+    """Whole-array template: one grid step, full blocks through VMEM."""
+    counts, consts = _chain_consts(chain)
+    struct = _out_struct(in_aval, src_layout, chain)
+    out_shape = _physical_struct(struct, dst_layout)
+
+    def kernel(x_ref, *refs):
+        const_refs, out_refs = refs[:len(consts)], refs[len(consts):]
+        v = _read_stage(x_ref[...], src_layout)
+        v = _emit_chain(v, chain, counts, tuple(r[...] for r in const_refs))
+        for ref, blk in zip(out_refs, _pack_out(v, dst_layout)):
+            ref[...] = blk
+
+    call = pl.pallas_call(kernel, out_shape=out_shape, interpret=interpret)
+
+    def run(x):
+        outs = call(x, *consts)
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        return _unpack_out(list(outs), struct)
+
+    return run
+
+
+def _burst_rows(chain, src_layout, dst_layout, m: int, d_buf: int) -> Optional[int]:
+    """Rows per streamed burst, or None when the geometry forces the block
+    template.  Base granularity is the lcm of the two tile heights (the
+    smallest slab both Frontends can relayout); ``d_buf`` bursts stack on
+    top of it exactly as in the relayout kernels."""
+    from repro.kernels.relayout import _eff_d_buf
+    base = 1
+    for layout in (src_layout, dst_layout):
+        if layout.is_tiled:
+            base = math.lcm(base, layout.tile[0])
+    if m % base:
+        return None
+    return base * _eff_d_buf(m // base, d_buf)
+
+
+def _compile_streamed(chain, src_layout, dst_layout, in_aval, d_buf, interpret):
+    """Row-burst template for all-streaming chains (d_buf-deep bursts)."""
+    logical = src_layout.logical_shape(in_aval.shape)
+    if len(logical) != 2:
+        return None
+    m, n = logical
+    rows = _burst_rows(chain, src_layout, dst_layout, m, d_buf)
+    if rows is None:
+        return None
+    out_dtype = P.chain_out_dtype(chain, in_aval.dtype)
+    counts, consts = _chain_consts(chain)
+
+    def spec(layout, nn):
+        if layout.is_tiled:
+            tm, tn = layout.tile
+            return pl.BlockSpec((rows // tm, nn // tn, tm, tn),
+                                lambda i: (i, 0, 0, 0))
+        return pl.BlockSpec((rows, nn), lambda i: (i, 0))
+
+    const_specs = [pl.BlockSpec(c.shape, lambda i, _nd=len(c.shape): (0,) * _nd)
+                   for c in consts]
+
+    def kernel(x_ref, *refs):
+        const_refs, (out_ref,) = refs[:len(consts)], refs[len(consts):]
+        v = _read_stage(x_ref[...], src_layout)
+        v = _emit_chain(v, chain, counts, tuple(r[...] for r in const_refs))
+        out_ref[...] = _write_stage(v, dst_layout)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(m // rows,),
+        in_specs=[spec(src_layout, n)] + const_specs,
+        out_specs=spec(dst_layout, n),
+        out_shape=jax.ShapeDtypeStruct(dst_layout.physical_shape((m, n)),
+                                       out_dtype),
+        interpret=interpret,
+    )
+    return lambda x: call(x, *consts)
+
+
+def _compile_for_aval(chain, src_layout, dst_layout, d_buf, in_aval, interpret):
+    streaming = all(p.streaming for p in chain)
+    if streaming and len(in_aval.shape) >= 2:
+        fn = _compile_streamed(chain, src_layout, dst_layout, in_aval,
+                               d_buf, interpret)
+        if fn is not None:
+            return fn
+    return _compile_block(chain, src_layout, dst_layout, in_aval, interpret)
+
+
+def _specializing(chain, src_layout, dst_layout, d_buf, interpret, validate):
+    """Descriptor-level callable: specializes one kernel per input aval
+    (mirroring how jit caches executables by shape under the CFG cache)."""
+    kernels: Dict[Tuple, Callable] = {}
+
+    def run(x):
+        x = jnp.asarray(x)
+        aval = jax.ShapeDtypeStruct(x.shape, x.dtype)
+        key = (x.shape, str(x.dtype))
+        fn = kernels.get(key)
+        if fn is None:
+            validate(aval)
+            fn = _compile_for_aval(chain, src_layout, dst_layout, d_buf,
+                                   aval, interpret)
+            kernels[key] = fn
+        return fn(x)
+
+    return run
+
+
+# -- public entry points -----------------------------------------------------
+def compile_local(desc: XDMADescriptor, *, interpret: bool = True) -> Callable:
+    """The full local datapath as one kernel; raises when not fusible.
+
+    The returned callable specializes (and memoizes) one ``pallas_call`` per
+    input shape/dtype — wrap it in ``jax.jit`` for the usual CFG caching.
+    """
+    if desc.movement != "local":
+        raise ValueError(f"compile_local only lowers local movements, "
+                         f"got {desc.movement!r}")
+    chain = desc.pre + desc.post
+    reason = _chain_fusible(chain)
+    if reason is not None:
+        raise ValueError(f"descriptor is not fusible ({reason}); "
+                         "use the fused-XLA backend instead")
+
+    def validate(aval):
+        desc.validate(desc.src.layout.logical_shape(aval.shape))
+
+    return _specializing(chain, desc.src.layout, desc.dst.layout, desc.d_buf,
+                         interpret, validate)
+
+
+def maybe_compile_local(desc: XDMADescriptor, *,
+                        interpret: bool = True) -> Optional[Callable]:
+    """``backend='auto'`` policy + stats: the compiled datapath, or None to
+    signal the XLA-composition fallback."""
+    ok, reason = can_fuse(desc)
+    _record(ok, reason)
+    if not ok:
+        return None
+    return compile_local(desc, interpret=interpret)
+
+
+def compile_side(layout: L.Layout, chain: Sequence[P.Plugin], *, side: str,
+                 d_buf: int = 9, interpret: bool = True) -> Callable:
+    """One endpoint side of a remote movement as a single kernel.
+
+    ``side='src'``: reader + pre-chain (physical src buffer -> link payload);
+    ``side='dst'``: post-chain + writer (link payload -> physical dst
+    buffer).  The identity layout stands in for the link end.
+    """
+    chain = tuple(chain)
+    reason = _chain_fusible(chain)
+    if reason is not None:
+        raise ValueError(f"side is not fusible ({reason})")
+    if side == "src":
+        src_layout, dst_layout = layout, L.MN
+    elif side == "dst":
+        src_layout, dst_layout = L.MN, layout
+    else:
+        raise ValueError(f"side must be 'src' or 'dst', got {side!r}")
+    return _specializing(chain, src_layout, dst_layout, d_buf, interpret,
+                         lambda aval: None)
+
+
+def maybe_compile_side(layout: L.Layout, chain: Sequence[P.Plugin], *,
+                       side: str, d_buf: int = 9,
+                       interpret: bool = True) -> Optional[Callable]:
+    """Side-fusion policy for remote movements: fuse a non-empty, fully
+    emit-capable chain whose payload stays a plain array (pytree payloads
+    like QTensor/CTensor split the stream across the collective), else None.
+    Sides with no plugins don't count as fallbacks — there is no chain to
+    fuse, and the reader/writer runs as the plain relayout it always was."""
+    chain = tuple(chain)
+    if not chain:
+        return None
+    reason = _chain_fusible(chain)
+    if reason is None:
+        for p in chain:
+            if p.pytree_payload:
+                reason = f"pytree-payload:{p.name}"
+                break
+    _record(reason is None, reason or "")
+    if reason is not None:
+        return None
+    return compile_side(layout, chain, side=side, d_buf=d_buf,
+                        interpret=interpret)

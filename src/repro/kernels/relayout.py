@@ -38,13 +38,30 @@ def _eff_d_buf(extent: int, d_buf: int) -> int:
 
 
 # --------------------------------------------------------------------------
+# Shared in-VMEM relayout stages.  These are the reader/writer halves of the
+# XDMA Frontend expressed on a block already resident in VMEM: the tile /
+# untile kernels below use them per burst, and the plugin compiler
+# (repro.core.plugin_compiler) emits them as the first/last stage of its
+# fused reader -> chain -> writer kernels.
+# --------------------------------------------------------------------------
+def tile_block(x: jnp.ndarray, tm: int, tn: int) -> jnp.ndarray:
+    """Logical (M, N) block -> physical (M//tm, N//tn, tm, tn) tile block."""
+    m, n = x.shape
+    return x.reshape(m // tm, tm, n // tn, tn).transpose(0, 2, 1, 3)
+
+
+def untile_block(blk: jnp.ndarray) -> jnp.ndarray:
+    """Physical (gm, gn, tm, tn) tile block -> logical (gm*tm, gn*tn) block."""
+    gm, gn, tm, tn = blk.shape
+    return blk.transpose(0, 2, 1, 3).reshape(gm * tm, gn * tn)
+
+
+# --------------------------------------------------------------------------
 # Case: tile  (MN -> tiled)
 # --------------------------------------------------------------------------
 def _tile_kernel(src_ref, dst_ref, *, tm: int, tn: int, d: int):
     # src block: (tm, d*tn) logical rows; dst block: (1, d, tm, tn)
-    blk = src_ref[...]                            # (tm, d*tn)
-    blk = blk.reshape(tm, d, tn).swapaxes(0, 1)   # (d, tm, tn)
-    dst_ref[...] = blk[None]
+    dst_ref[...] = tile_block(src_ref[...], tm, tn)
 
 
 def tile(x: jnp.ndarray, tile_shape: Tuple[int, int], *, d_buf: int = 9,
@@ -68,8 +85,8 @@ def tile(x: jnp.ndarray, tile_shape: Tuple[int, int], *, d_buf: int = 9,
 # Case: untile  (tiled -> MN)
 # --------------------------------------------------------------------------
 def _untile_kernel(src_ref, dst_ref, *, tm: int, tn: int, d: int):
-    blk = src_ref[...][0]                         # (d, tm, tn)
-    dst_ref[...] = blk.swapaxes(0, 1).reshape(tm, d * tn)
+    # src block: (1, d, tm, tn) tiles; dst block: (tm, d*tn) logical rows
+    dst_ref[...] = untile_block(src_ref[...])
 
 
 def untile(x: jnp.ndarray, *, d_buf: int = 9, interpret: bool = True) -> jnp.ndarray:

@@ -70,7 +70,11 @@ def _dispatch(cfg, tokens, eidx, gates, capacity):
     pos = jnp.arange(T * k, dtype=jnp.int32) - starts[se]
     keep = pos < C
     slot = jnp.where(keep, se * C + pos, E * C)                # sentinel = dropped
-    contrib = jnp.where(keep[:, None], tokens[tok_of], 0)
+    # The expert-order permute is the XDMA GatherScatter stage (index-driven
+    # reorder on the stream) — the same plugin a fused dispatch descriptor
+    # would emit into its kernel.
+    permute = XP.GatherScatter(indices=tok_of, axis=0)
+    contrib = jnp.where(keep[:, None], permute(tokens), 0)
     buf = jnp.zeros((E * C + 1, d), tokens.dtype).at[slot].add(contrib)
     return buf[:-1].reshape(E, C, d), slot, keep, order, tok_of
 

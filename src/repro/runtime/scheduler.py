@@ -206,6 +206,10 @@ class DistributedScheduler:
 
     @staticmethod
     def _batchable(t: _Task, x: Any) -> bool:
+        # Local concrete tasks batch whatever their lowering: the XLA
+        # composition and the plugin-compiler's fused Pallas programs
+        # (backend auto/compiled) both jit into the round program — only the
+        # raw pallas relayout backend keeps its own dispatch path.
         return (t.kind == "xdma" and t.desc is not None
                 and t.desc.movement == "local" and t.desc.backend != "pallas"
                 and not isinstance(x, jax.core.Tracer))

@@ -13,8 +13,17 @@ SRC = os.path.join(ROOT, "src")
 # machine: with hypothesis installed the real decorators are re-exported;
 # without it, @given tests skip and every other test in the module runs.
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import HealthCheck, given, settings, strategies as st
     HAVE_HYPOTHESIS = True
+
+    # Bounded, deterministic profiles: CI runs `--hypothesis-profile=ci`
+    # (pair it with a fixed --hypothesis-seed); "dev" keeps local runs quick.
+    settings.register_profile(
+        "ci", max_examples=25, deadline=None, print_blob=True,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large,
+                               HealthCheck.filter_too_much])
+    settings.register_profile("dev", max_examples=10, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
 except ImportError:  # pragma: no cover - exercised on clean machines
     HAVE_HYPOTHESIS = False
 

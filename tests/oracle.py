@@ -1,0 +1,183 @@
+"""Pure-numpy oracle for ``xdma.transfer`` — the differential-test ground truth.
+
+Everything here is deliberately *independent* of the JAX implementation: the
+layout algebra is re-derived with numpy reshapes, every registered plugin has
+a numpy re-implementation, and remote movements are modelled on a size-1 mesh
+axis (where the link collective is the identity, so the oracle is the plugin
+composition around an identity link).  ``tests/test_differential.py`` asserts
+``xdma.transfer == oracle`` over randomly generated descriptors.
+
+Payload pytrees mirror the engine's: :class:`OQTensor` / :class:`OCTensor`
+are plain-numpy twins of ``QTensor`` / ``CTensor`` with the same fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import layouts as L
+from repro.core import plugins as P
+from repro.core.descriptor import XDMADescriptor
+
+
+@dataclasses.dataclass
+class OQTensor:
+    values: np.ndarray
+    scales: np.ndarray
+
+
+@dataclasses.dataclass
+class OCTensor:
+    values: np.ndarray
+    mask: np.ndarray
+
+
+# -- layout algebra, re-derived with numpy -----------------------------------
+def to_logical(x: np.ndarray, layout: L.Layout) -> np.ndarray:
+    if layout.tile is None:
+        return x
+    *lead, gm, gn, tm, tn = x.shape
+    perm = tuple(range(len(lead))) + tuple(len(lead) + p for p in (0, 2, 1, 3))
+    return x.transpose(perm).reshape(*lead, gm * tm, gn * tn)
+
+
+def from_logical(x: np.ndarray, layout: L.Layout) -> np.ndarray:
+    if layout.tile is None:
+        return x
+    *lead, m, n = x.shape
+    tm, tn = layout.tile
+    y = x.reshape(*lead, m // tm, tm, n // tn, tn)
+    perm = tuple(range(len(lead))) + tuple(len(lead) + p for p in (0, 2, 1, 3))
+    return y.transpose(perm)
+
+
+# -- plugin semantics, re-implemented with numpy ------------------------------
+def apply_plugin(p: P.Plugin, x: Any) -> Any:
+    if isinstance(p, P.Identity):
+        return x
+    if isinstance(p, P.Transpose):
+        return np.swapaxes(x, -1, -2)
+    if isinstance(p, P.Cast):
+        return x.astype(np.dtype(p.dtype))
+    if isinstance(p, P.Scale):
+        return x * np.asarray(p.alpha, dtype=x.dtype)
+    if isinstance(p, P.BiasAdd):
+        return x + np.asarray(p.bias, dtype=x.dtype)
+    if isinstance(p, P.RMSNormPlugin):
+        xf = x.astype(np.float32)
+        rms = 1.0 / np.sqrt(np.mean(xf * xf, axis=-1, keepdims=True) + p.eps)
+        y = xf * rms
+        if p.weight is not None:
+            y = y * np.asarray(p.weight, dtype=np.float32)
+        return y.astype(x.dtype)
+    if isinstance(p, P.Quantize):
+        xf = x.astype(np.float32)
+        amax = np.max(np.abs(xf), axis=-1, keepdims=True)
+        scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+        q = np.clip(np.round(xf / scale), -127, 127).astype(np.int8)
+        return OQTensor(values=q, scales=scale)
+    if isinstance(p, P.Dequantize):
+        return (x.values.astype(np.float32) * x.scales).astype(np.dtype(p.dtype))
+    if isinstance(p, P.GatherScatter):
+        return np.take(x, np.asarray(p.indices), axis=p.axis)
+    if isinstance(p, P.Compress):
+        m = x.shape[-2]
+        blocks = x.reshape(x.shape[:-2] + (m // p.block_rows, p.block_rows,
+                                           x.shape[-1]))
+        mask = np.any(blocks != 0, axis=(-1, -2))
+        return OCTensor(values=x, mask=mask)
+    if isinstance(p, P.Decompress):
+        v, mask = x.values, x.mask
+        block_rows = v.shape[-2] // mask.shape[-1]
+        keep = np.repeat(mask, block_rows, axis=-1).astype(v.dtype)
+        return v * keep[..., :, None]
+    if isinstance(p, P.ReduceStage):
+        if p.op == "max":
+            return np.max(x, axis=-2, keepdims=p.keepdims)
+        # jnp.sum accumulates half-precision inputs in f32; match it
+        acc = x.astype(np.float32) if x.dtype.itemsize < 4 else x
+        return np.sum(acc, axis=-2, keepdims=p.keepdims).astype(x.dtype)
+    raise NotImplementedError(f"oracle has no model for plugin {p.name!r}")
+
+
+def apply_chain(plugins: Sequence[P.Plugin], x: Any) -> Any:
+    for p in plugins:
+        x = apply_plugin(p, x)
+    return x
+
+
+def _write(y: Any, layout: L.Layout) -> Any:
+    if isinstance(y, OQTensor):
+        return OQTensor(values=from_logical(y.values, layout), scales=y.scales)
+    if isinstance(y, OCTensor):
+        return OCTensor(values=from_logical(y.values, layout), mask=y.mask)
+    return from_logical(y, layout)
+
+
+def oracle_transfer(x, desc: XDMADescriptor) -> Any:
+    """Ground truth for ``xdma.transfer(x, desc)``.
+
+    Local movements are exact by construction; remote movements assume the
+    size-1 mesh axis the differential tests run on, where peer / all_to_all /
+    psum links are the identity and the movement reduces to the two plugin
+    hosts around it.  (Reduce descriptors with a Quantize/Dequantize codec
+    take the ``compressed_psum`` two-phase path instead — keep codecs out of
+    generated reduce chains, or model them separately.)
+    """
+    x = np.asarray(x)
+    if desc.movement == "reduce" and any(isinstance(p, P.Quantize)
+                                         for p in desc.pre):
+        raise NotImplementedError("oracle does not model the compressed_psum "
+                                  "codec; keep Quantize out of reduce chains")
+    logical = to_logical(x, desc.src.layout)
+    y = apply_chain(desc.pre, logical)     # pre host (src half-XDMA)
+    # the link: identity on a size-1 axis, for all three remote kinds
+    y = apply_chain(desc.post, y)          # post host (dst half-XDMA)
+    return _write(y, desc.dst.layout)
+
+
+def assert_matches(got: Any, want: Any, *, rtol: float = 2e-5,
+                   atol: float = 1e-5, context: str = "") -> None:
+    """got (jax, QTensor/CTensor/array) ~= want (oracle).  Tolerances are for
+    float drift (np vs XLA reduction order, rsqrt rounding); integer payloads
+    allow one quantization step."""
+    if isinstance(want, OQTensor):
+        dv = np.abs(np.asarray(got.values, np.int32) -
+                    want.values.astype(np.int32))
+        assert dv.max(initial=0) <= 1, f"{context}: int8 values off by >1 step"
+        np.testing.assert_allclose(np.asarray(got.scales), want.scales,
+                                   rtol=rtol, atol=atol, err_msg=context)
+        return
+    if isinstance(want, OCTensor):
+        np.testing.assert_array_equal(np.asarray(got.mask), want.mask,
+                                      err_msg=context)
+        got = got.values
+        want = want.values
+    got = np.asarray(got)
+    assert got.shape == want.shape, f"{context}: {got.shape} != {want.shape}"
+    assert got.dtype == want.dtype, f"{context}: {got.dtype} != {want.dtype}"
+    if want.dtype == np.dtype(np.int8):
+        assert np.abs(got.astype(np.int32) -
+                      want.astype(np.int32)).max(initial=0) <= 1, context
+        return
+    f32 = np.float32
+    np.testing.assert_allclose(got.astype(f32), want.astype(f32),
+                               rtol=rtol, atol=atol, err_msg=context)
+
+
+def chain_tolerance(*descs) -> dict:
+    """rtol/atol for oracle comparisons, scaled to the chain's precision loss.
+
+    One float ulp of np-vs-XLA drift upstream of a rounding stage can flip
+    that rounding: a Quantize/Dequantize roundtrip turns it into one int8
+    quantum (~amax/127), a half-precision Cast into one bf16 ulp (relative
+    2^-8).  Plain float chains stay at float32 comparison noise."""
+    chain = [p for d in descs for p in tuple(d.pre) + tuple(d.post)]
+    if any(isinstance(p, P.Dequantize) for p in chain):
+        return dict(rtol=5e-2, atol=0.25)
+    if any(isinstance(p, P.Cast) and np.dtype(p.dtype).itemsize < 4
+           for p in chain):
+        return dict(rtol=2e-2, atol=1e-2)
+    return dict(rtol=2e-5, atol=1e-5)

@@ -1,0 +1,406 @@
+"""Property-based differential harness: random descriptors vs the numpy oracle.
+
+The descriptor space (endpoints x layouts x plugin chains x d_buf) has grown
+past hand-enumerated cases; this module generates *valid* random
+``XDMADescriptor``s and checks, for every endpoint kind:
+
+* ``xdma.transfer`` == the pure-numpy oracle (``tests/oracle.py``);
+* the plugin-compiler's fused Pallas lowering is **bit-identical** to the
+  fused-XLA composition (``backend='auto'/'compiled'`` vs ``backend='fused'``)
+  — the ISSUE-3 acceptance property, for every registry plugin;
+* compile-time contracts (``out_logical_shape`` / ``out_dtype`` /
+  ``src_patterns``) agree with what actually executes.
+
+Case generation is shared between the hypothesis strategies (shrinking needs
+structured draws; :class:`DescCase` keeps the repr compact so shrunk examples
+read as one line) and a seeded deterministic sweep that runs even where
+hypothesis is not installed (the conftest shim skips only the ``@given``
+tests).
+"""
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import given, settings, st  # hypothesis or skip-shim
+
+import oracle as O
+from repro import core as C
+from repro.core import plugins as P
+from repro.core import xdma
+from repro.sharding import shard_map_compat, P as Pspec
+
+# -- the generation space ----------------------------------------------------
+MS = (128, 256, 384)
+NS = (128, 256)
+LAYOUTS = ("MN", "MNM8N128", "MNM16N128", "MNM32N128")
+D_BUFS = (1, 3, 5, 9)
+KINDS = ("local", "peer", "all_to_all", "reduce")
+# chain segments: atomic units that keep the payload a plain array at the
+# host boundary (Quantize/Compress pairs never straddle the link)
+SEGMENTS = ("scale", "bias", "rmsnorm", "cast_bf16", "transpose", "gather",
+            "compress", "quantize_roundtrip", "identity")
+TERMINALS = ("none", "reduce_sum", "reduce_max", "quantize")
+
+
+def _build_chain(segment_ids, terminal, m, n, idx_seed):
+    """Segment tags -> plugin list, tracking the logical shape as it evolves
+    so index/tile arguments stay valid."""
+    chain = []
+    cm, cn = m, n
+    for tag in segment_ids:
+        if tag == "identity":
+            chain.append(P.Identity())
+        elif tag == "scale":
+            chain.append(P.Scale(1.5))
+        elif tag == "bias":
+            chain.append(P.BiasAdd(0.25))
+        elif tag == "rmsnorm":
+            chain.append(P.RMSNormPlugin())
+        elif tag == "cast_bf16":
+            chain.append(P.Cast(jnp.bfloat16))
+        elif tag == "transpose":
+            chain.append(P.Transpose())
+            cm, cn = cn, cm
+        elif tag == "gather":
+            perm = np.random.default_rng(idx_seed).permutation(cm)
+            chain.append(P.GatherScatter(indices=perm))
+        elif tag == "compress":
+            chain.extend([P.Compress(block_rows=8), P.Decompress()])
+        elif tag == "quantize_roundtrip":
+            chain.extend([P.Quantize(), P.Dequantize(jnp.float32)])
+        else:  # pragma: no cover - generator bug
+            raise ValueError(tag)
+    if terminal == "reduce_sum":
+        chain.append(P.ReduceStage("sum"))
+        cm = 1
+    elif terminal == "reduce_max":
+        chain.append(P.ReduceStage("max"))
+        cm = 1
+    elif terminal == "quantize":
+        chain.append(P.Quantize())
+    return chain, (cm, cn)
+
+
+def _layout_fits(name, shape):
+    layout = C.by_name(name)
+    if layout.tile is None:
+        return True
+    tm, tn = layout.tile
+    return shape[0] % tm == 0 and shape[1] % tn == 0
+
+
+def _segment_menu(kind):
+    # A Quantize anywhere on a reduce descriptor's pre host selects the
+    # compressed_psum codec, which the oracle deliberately does not model.
+    if kind == "reduce":
+        return tuple(s for s in SEGMENTS if s != "quantize_roundtrip")
+    return SEGMENTS
+
+
+@dataclasses.dataclass
+class DescCase:
+    """One generated differential case; repr is the shrink-friendly one-liner."""
+
+    kind: str
+    m: int
+    n: int
+    src: str
+    dst: str
+    segments: tuple
+    terminal: str
+    split: int          # chain prefix length placed on the pre host
+    d_buf: int
+    seed: int
+
+    def __repr__(self):
+        return (f"DescCase({self.kind}, {self.m}x{self.n}, {self.src}->"
+                f"{self.dst}, pre={self.segments[:self.split]}+"
+                f"{('' if self.terminal == 'none' else self.terminal)!r}, "
+                f"post={self.segments[self.split:]}, d_buf={self.d_buf}, "
+                f"seed={self.seed})")
+
+    def build(self):
+        """-> (physical src array, descriptor)."""
+        chain, out_shape = _build_chain(self.segments, self.terminal,
+                                        self.m, self.n, self.seed)
+        n_pre = sum(len(_build_chain((s,), "none", 1, 1, 0)[0])
+                    for s in self.segments[:self.split])
+        pre, post = tuple(chain[:n_pre]), tuple(chain[n_pre:])
+        src_l, dst_l = C.by_name(self.src), C.by_name(self.dst)
+        if self.kind == "local":
+            src_ep, dst_ep = C.Endpoint.local(src_l), C.Endpoint.local(dst_l)
+        elif self.kind == "peer":
+            src_ep = C.Endpoint.local(src_l)
+            dst_ep = C.Endpoint.peer("m", [(0, 0)], dst_l)
+        elif self.kind == "all_to_all":
+            src_ep = C.Endpoint.local(src_l)
+            dst_ep = C.Endpoint.all_to_all("m", split_axis=0, concat_axis=0,
+                                           layout=dst_l)
+        else:
+            src_ep = C.Endpoint.local(src_l)
+            dst_ep = C.Endpoint.reduce("m", axis_size=1, layout=dst_l)
+        desc = C.XDMADescriptor(src=src_ep, dst=dst_ep, pre=pre, post=post,
+                                d_buf=self.d_buf)
+        rng = np.random.default_rng(self.seed)
+        logical = rng.standard_normal((self.m, self.n)).astype(np.float32)
+        logical[: self.m // 4] = 0.0         # give Compress blocks to skip
+        x = jnp.asarray(O.from_logical(logical, src_l))
+        return x, desc
+
+
+def make_case(rng, kind=None) -> DescCase:
+    """Sample one valid case from a ``numpy.random.Generator``-like ``rng``
+    (the seeded twin of the hypothesis strategy below)."""
+    kind = kind or KINDS[rng.integers(len(KINDS))]
+    m, n = MS[rng.integers(len(MS))], NS[rng.integers(len(NS))]
+    k = int(rng.integers(0, 4))
+    menu = _segment_menu(kind)
+    segments = tuple(menu[rng.integers(len(menu))] for _ in range(k))
+    terminal = TERMINALS[rng.integers(len(TERMINALS))]
+    if kind == "reduce" and terminal == "quantize":
+        terminal = "none"                    # codec path: oracle out of scope
+    _, out_shape = _build_chain(segments, terminal, m, n, 0)
+    src = LAYOUTS[rng.integers(len(LAYOUTS))]
+    dst_opts = [l for l in LAYOUTS if _layout_fits(l, out_shape)]
+    dst = dst_opts[rng.integers(len(dst_opts))]
+    split = int(rng.integers(0, len(segments) + 1))
+    return DescCase(kind=kind, m=m, n=n, src=src, dst=dst, segments=segments,
+                    terminal=terminal, split=split,
+                    d_buf=D_BUFS[rng.integers(len(D_BUFS))],
+                    seed=int(rng.integers(0, 2 ** 16)))
+
+
+# -- execution helpers --------------------------------------------------------
+_MESH = None
+
+
+def _mesh():
+    global _MESH
+    if _MESH is None:
+        from jax.sharding import Mesh
+        _MESH = Mesh(np.array(jax.devices()[:1]), ("m",))
+    return _MESH
+
+
+def run_transfer(x, desc):
+    """xdma.transfer, inside a size-1 shard_map for remote movements."""
+    if desc.movement == "local":
+        return xdma.transfer(x, desc)
+    fn = shard_map_compat(lambda v: xdma.transfer(v, desc), _mesh(),
+                          (Pspec("m"),), Pspec("m"))
+    return fn(x)
+
+
+def check_against_oracle(case: DescCase):
+    x, desc = case.build()
+    got = run_transfer(x, desc)
+    want = O.oracle_transfer(x, desc)
+    O.assert_matches(got, want, context=repr(case), **O.chain_tolerance(desc))
+    # compile-time contracts agree with what executed
+    logical_in = desc.src.layout.logical_shape(x.shape)
+    out_logical = desc.out_logical_shape(logical_in)
+    values = got.values if isinstance(got, (P.QTensor, P.CTensor)) else got
+    assert values.shape == desc.dst.layout.physical_shape(out_logical), repr(case)
+    assert values.dtype == jnp.dtype(desc.out_dtype(jnp.float32)), repr(case)
+
+
+def check_fused_vs_fallback(case: DescCase):
+    """auto (plugin-compiler when fusible) vs forced XLA composition: the
+    two lowerings of one local descriptor must agree BITWISE."""
+    x, desc = case.build()
+    auto = xdma.transfer(x, desc)
+    fallback = xdma.transfer(x, dataclasses.replace(desc, backend="fused"))
+    _assert_bit_identical(auto, fallback, repr(case))
+
+
+def _assert_bit_identical(a, b, context):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), context
+    for va, vb in zip(la, lb):
+        assert va.dtype == vb.dtype and va.shape == vb.shape, context
+        assert bool(jnp.array_equal(va, vb)), f"{context}: payload differs"
+
+
+# -- seeded deterministic sweep (runs without hypothesis) ---------------------
+@pytest.mark.parametrize("kind", KINDS)
+def test_seeded_differential_sweep(kind):
+    # zlib.crc32, not hash(): string hashing is salted per process and would
+    # make this "deterministic" sweep generate different cases every run
+    rng = np.random.default_rng(zlib.crc32(kind.encode()))
+    for i in range(8):
+        check_against_oracle(make_case(rng, kind=kind))
+
+
+def test_seeded_fused_vs_fallback_sweep():
+    rng = np.random.default_rng(42)
+    for i in range(12):
+        check_fused_vs_fallback(make_case(rng, kind="local"))
+
+
+# Canonical single-plugin chains covering EVERY registered plugin: the fused
+# lowering (or its fallback, for emit-less plugins) must match the forced
+# XLA composition bitwise.
+_CANONICAL = {
+    "identity": ("MN", "MNM8N128", (P.Identity(),)),
+    "transpose": ("MNM8N128", "MN", (P.Transpose(),)),
+    "cast": ("MN", "MNM16N128", (P.Cast(jnp.bfloat16),)),
+    "scale": ("MN", "MN", (P.Scale(2.5),)),
+    "bias_add": ("MNM8N128", "MNM8N128", (P.BiasAdd(0.75),)),
+    "rmsnorm": ("MN", "MNM8N128", (P.RMSNormPlugin(),)),
+    "quantize_int8": ("MN", "MNM32N128", (P.Quantize(),)),
+    "dequantize_int8": ("MN", "MN", (P.Quantize(), P.Dequantize(jnp.float32))),
+    "gather_scatter": ("MN", "MN",
+                       (P.GatherScatter(indices=np.arange(127, -1, -1)),)),
+    "compress_blocksparse": ("MN", "MNM8N128", (P.Compress(block_rows=8),)),
+    "decompress_blocksparse": ("MN", "MN",
+                               (P.Compress(block_rows=8), P.Decompress())),
+    "reduce_stage": ("MN", "MN", (P.ReduceStage("max"),)),
+}
+
+
+def test_canonical_covers_whole_registry():
+    assert set(_CANONICAL) == set(P.registered_plugins()), \
+        "new registry plugin needs a canonical differential case"
+
+
+@pytest.mark.parametrize("name", sorted(_CANONICAL))
+def test_registry_plugin_bit_identity(name):
+    src, dst, chain = _CANONICAL[name]
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((128, 128)),
+                    jnp.float32)
+    x = x.at[:32].set(0.0)
+    xin = C.by_name(src).from_logical(x)
+    desc = C.describe(src, dst, *chain)
+    auto = xdma.transfer(xin, desc)
+    fused = xdma.transfer(xin, dataclasses.replace(desc, backend="fused"))
+    _assert_bit_identical(auto, fused, name)
+
+
+# -- hypothesis strategies ----------------------------------------------------
+@st.composite
+def desc_cases(draw, kinds=KINDS):
+    kind = draw(st.sampled_from(list(kinds)))
+    m, n = draw(st.sampled_from(list(MS))), draw(st.sampled_from(list(NS)))
+    segments = tuple(draw(st.lists(st.sampled_from(list(_segment_menu(kind))),
+                                   min_size=0, max_size=3)))
+    terminal = draw(st.sampled_from(
+        [t for t in TERMINALS if not (kind == "reduce" and t == "quantize")]))
+    _, out_shape = _build_chain(segments, terminal, m, n, 0)
+    src = draw(st.sampled_from(list(LAYOUTS)))
+    dst = draw(st.sampled_from(
+        [l for l in LAYOUTS if _layout_fits(l, out_shape)]))
+    split = draw(st.integers(0, len(segments)))
+    d_buf = draw(st.sampled_from(list(D_BUFS)))
+    seed = draw(st.integers(0, 2 ** 16 - 1))
+    return DescCase(kind=kind, m=m, n=n, src=src, dst=dst, segments=segments,
+                    terminal=terminal, split=split, d_buf=d_buf, seed=seed)
+
+
+# -- property tests: transfer == oracle, one per endpoint kind ----------------
+@given(desc_cases(kinds=("local",)))
+@settings(deadline=None)
+def test_prop_local_matches_oracle(case):
+    check_against_oracle(case)
+
+
+@given(desc_cases(kinds=("peer",)))
+@settings(deadline=None)
+def test_prop_peer_matches_oracle(case):
+    check_against_oracle(case)
+
+
+@given(desc_cases(kinds=("all_to_all",)))
+@settings(deadline=None)
+def test_prop_all_to_all_matches_oracle(case):
+    check_against_oracle(case)
+
+
+@given(desc_cases(kinds=("reduce",)))
+@settings(deadline=None)
+def test_prop_reduce_matches_oracle(case):
+    check_against_oracle(case)
+
+
+# -- property tests: fused Pallas == XLA composition, bitwise -----------------
+@given(desc_cases(kinds=("local",)))
+@settings(deadline=None)
+def test_prop_fused_vs_fallback_bit_identity(case):
+    check_fused_vs_fallback(case)
+
+
+@given(desc_cases(kinds=("local",)))
+@settings(deadline=None)
+def test_prop_compiled_backend_bit_identity(case):
+    """backend='compiled' (forced single kernel) == backend='fused', for any
+    generated all-emit chain; non-fusible chains must refuse loudly."""
+    x, desc = case.build()
+    compiled = dataclasses.replace(desc, backend="compiled")
+    if all(p.supports_emit for p in desc.pre + desc.post):
+        _assert_bit_identical(
+            xdma.transfer(x, compiled),
+            xdma.transfer(x, dataclasses.replace(desc, backend="fused")),
+            repr(case))
+    else:
+        with pytest.raises(ValueError, match="not fusible"):
+            xdma.transfer(x, compiled)
+
+
+@given(desc_cases(kinds=("local",)))
+@settings(deadline=None)
+def test_prop_d_buf_invariance(case):
+    """The stream-buffer depth changes burst geometry, never results."""
+    x, desc = case.build()
+    outs = [xdma.transfer(x, dataclasses.replace(desc, d_buf=d))
+            for d in (1, 9)]
+    _assert_bit_identical(outs[0], outs[1], repr(case))
+
+
+# -- property tests: compile-time contracts -----------------------------------
+@given(desc_cases(kinds=("local",)), st.sampled_from([1, 2, 4]))
+@settings(deadline=None)
+def test_prop_src_patterns_cover_every_address_once(case, channels):
+    """N_C lanes partition the address stream exactly (no overlap, no gap)."""
+    x, desc = case.build()
+    logical = desc.src.layout.logical_shape(x.shape)
+    if logical[-2] % channels:
+        channels = 1
+    if desc.src.layout.is_tiled and \
+            (logical[-2] // channels) % desc.src.layout.tile[0]:
+        channels = 1
+    desc = dataclasses.replace(desc, channels=channels)
+    pats = desc.src_patterns(logical)
+    assert len(pats) == channels, repr(case)
+    addrs = np.concatenate([p.addresses() for p in pats])
+    assert np.array_equal(np.sort(addrs), np.arange(int(np.prod(logical)))), \
+        repr(case)
+
+
+@given(st.lists(desc_cases(kinds=("local",)), min_size=1, max_size=3),
+       st.sampled_from(list(MS)), st.sampled_from(list(NS)))
+@settings(deadline=None)
+def test_prop_queue_matches_composed_oracle(cases, m, n):
+    """An XDMAQueue of random local tasks == oracle composition, re-describing
+    each stage so layouts/shapes stay compatible along the chain."""
+    rng = np.random.default_rng(0)
+    logical = rng.standard_normal((m, n)).astype(np.float32)
+    x = jnp.asarray(logical)
+    descs = []
+    shape, src = (m, n), "MN"
+    for case in cases:
+        segs = tuple(s for s in case.segments
+                     if s not in ("gather",))          # gather needs fixed M
+        chain, out_shape = _build_chain(segs, "none", *shape, case.seed)
+        dst_opts = [l for l in LAYOUTS if _layout_fits(l, out_shape)]
+        dst = dst_opts[case.seed % len(dst_opts)]
+        descs.append(C.describe(src, dst, *chain, d_buf=case.d_buf))
+        shape, src = out_shape, dst
+    queue = C.XDMAQueue(descs, name="prop")
+    got = queue.run(x)
+    want = np.asarray(logical)        # physical==logical for the MN entry
+    for d in descs:                   # each stage consumes the previous
+        want = O.oracle_transfer(want, d)  # stage's physical dst buffer
+    O.assert_matches(got, want, context=f"queue of {len(descs)}",
+                     **O.chain_tolerance(*descs))

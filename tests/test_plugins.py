@@ -88,3 +88,102 @@ def test_quantized_payload_travels_tiled():
     assert isinstance(out, C.QTensor)
     assert out.values.dtype == jnp.int8
     assert out.values.shape == (2, 2, 32, 128)
+
+
+# -- the plugin registry ------------------------------------------------------
+def test_registry_lookup_and_duplicate_rejection():
+    reg = C.registered_plugins()
+    assert reg["transpose"] is C.Transpose
+    assert C.plugin_by_name("gather_scatter") is C.GatherScatter
+    with pytest.raises(KeyError, match="unknown plugin"):
+        C.plugin_by_name("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        @C.register_plugin
+        class Imposter(C.Plugin):
+            name = "transpose"
+
+
+# -- compiler-era plugins -----------------------------------------------------
+def test_gather_scatter_matches_take_and_inverts():
+    x = rand((64, 128), 6)
+    perm = np.random.default_rng(0).permutation(64)
+    g = C.GatherScatter(indices=perm)
+    assert jnp.array_equal(g(x), x[perm])
+    inv = np.argsort(perm)
+    assert jnp.array_equal(C.GatherScatter(indices=inv)(g(x)), x)
+    assert g.out_logical_shape((64, 128)) == (64, 128)
+    # expanding gather declares the new row count
+    dup = C.GatherScatter(indices=np.arange(64).repeat(2))
+    assert dup.out_logical_shape((64, 128)) == (128, 128)
+    with pytest.raises(ValueError):
+        C.GatherScatter()
+
+
+def test_compress_roundtrip_occupancy_and_wire_bytes():
+    x = rand((64, 128), 7)
+    x = x.at[:32].set(0.0)
+    ct = C.Compress(block_rows=8)(x)
+    assert isinstance(ct, C.CTensor)
+    assert ct.mask.shape == (8,) and float(ct.occupancy()) == 0.5
+    dense = 64 * 128 * 4
+    assert ct.wire_nbytes() == dense // 2 + 8   # half the blocks + the mask
+    assert jnp.array_equal(C.Decompress()(ct), x)
+    with pytest.raises(ValueError, match="not divisible"):
+        C.Compress(block_rows=7)(x)
+
+
+def test_reduce_stage_sum_max():
+    x = rand((32, 128), 8)
+    assert jnp.allclose(C.ReduceStage("sum")(x), x.sum(0, keepdims=True))
+    assert jnp.array_equal(C.ReduceStage("max")(x), x.max(0, keepdims=True))
+    assert C.ReduceStage("sum").out_logical_shape((32, 128)) == (1, 128)
+    with pytest.raises(ValueError):
+        C.ReduceStage("mean")
+
+
+# -- rank-change declaration (CFG-time failure, not a cryptic jit error) -----
+class _RankChanger(C.Plugin):
+    name = "rank_changer_test"
+
+    def __call__(self, x):
+        return x.reshape(-1)
+
+    def out_logical_shape(self, shape):
+        return (int(np.prod(shape)),)
+
+
+def test_undeclared_rank_change_raises_clearly():
+    with pytest.raises(ValueError, match="changed logical rank"):
+        C.plugins.chain_out_shape([_RankChanger()], (16, 128))
+    # the descriptor surfaces it at CFG time too, naming the plugin
+    d = C.describe("MN", "MN", _RankChanger())
+    with pytest.raises(ValueError, match="rank_changer_test"):
+        d.out_logical_shape((16, 128))
+
+
+def test_declared_rank_change_is_allowed():
+    squeeze = C.ReduceStage("sum", keepdims=False)
+    assert squeeze.changes_rank
+    assert C.plugins.chain_out_shape([squeeze], (16, 128)) == (128,)
+
+    class Declared(_RankChanger):
+        name = "declared_rank_changer_test"
+        changes_rank = True
+
+    assert C.plugins.chain_out_shape([Declared()], (16, 128)) == (16 * 128,)
+
+
+# -- cfg_stats: fused vs fallback accounting ---------------------------------
+def test_plugin_compiler_cfg_stats():
+    from repro.core import plugin_compiler as PC
+    from repro.core import xdma
+    xdma.clear_cache()      # a CFG-cache hit skips _lower and records nothing
+    PC.clear_stats()
+    x = rand((64, 256), 9)
+    xdma.transfer(x, C.describe("MN", "MNM8N128", C.Scale(1.25)))   # fuses
+    xdma.transfer(x, C.describe("MN", "MNM32N128", C.Quantize()))   # falls back
+    xdma.transfer(x, C.describe("MN", "MNM8N128"))                  # empty chain
+    stats = PC.cfg_stats()
+    assert stats["fused"] >= 1 and stats["fallback"] >= 2
+    assert any(r.startswith("no-emit:quantize") for r in stats["reasons"])
+    assert "empty-chain" in stats["reasons"]
