@@ -57,8 +57,8 @@ def run() -> None:
             x = desc.src.layout.from_logical(x)
         cached = _time_per_call(lambda v: xdma.transfer(v, desc), x)
         retrace = _time_retrace(make_desc, x)
-        print(f"cfgcache_{name}_cached,{cached * 1e6:.1f},{retrace / cached:.1f}")
-        print(f"cfgcache_{name}_retrace,{retrace * 1e6:.1f},1.0")
+        print(f"cfgcache_{name}_cached,{cached * 1e6:.1f},{retrace / cached:.1f},")
+        print(f"cfgcache_{name}_retrace,{retrace * 1e6:.1f},1.0,")
 
 
 if __name__ == "__main__":

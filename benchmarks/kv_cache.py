@@ -124,7 +124,7 @@ def run(csv=True):
                      bb / max(xb, 1.0)))
     if csv:
         for name, us, ratio in rows:
-            print(f"{name},{us:.1f},{ratio:.3f}")
+            print(f"{name},{us:.1f},{ratio:.3f},")
     return rows
 
 

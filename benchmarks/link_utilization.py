@@ -27,11 +27,18 @@ import numpy as np
 from repro import core as C
 from repro.core import baselines as B
 from repro.kernels.relayout import _eff_d_buf
+from repro.runtime.topology import SW_ISSUE_OVERHEAD, Link
 
 from .common import bench, memcpy_bw
 
 LAYOUTS = ["MNM8N128", "MNM16N128", "MNM32N128"]
 SIZES = [128, 256, 512, 1024]
+# Fig. 4 traffic patterns for the simulator sweep: (tag, src, dst, transpose)
+TRAFFIC = [
+    ("store", "MN", None, False),          # Prefill: MN -> tiled
+    ("load", None, "MN", False),           # tiled -> MN
+    ("ttrans", None, None, True),          # tiled -> tiled, transposed
+]
 
 
 def _copy_stage(x):
@@ -57,7 +64,49 @@ def _setups(desc):
     ]
 
 
-def run(csv=True):
+def sim_rows():
+    """Deterministic Fig. 4 sweep: per-traffic-pattern link utilization under
+    hardware (Frontend) vs software address generation, priced purely from
+    pattern contiguity (``desc.burst_bytes``) by the topology cost model —
+    nothing executes.  The ``.../ratio_d9`` rows are the paper's headline
+    software-AGU vs Frontend gap (they report the simulated sw time in the
+    time column)."""
+    link = Link("ici", "a", "b")
+    rows = []
+    for lname in LAYOUTS:
+        tiled = C.by_name(lname)
+        for size in SIZES:
+            shape = (size, size)
+            nbytes = size * size * 4
+            for tag, src, dst, transpose in TRAFFIC:
+                src_l = C.by_name(src) if src else tiled
+                dst_l = C.by_name(dst) if dst else tiled
+                chain = [C.Transpose()] if transpose else []
+                desc = C.describe(src_l, dst_l, *chain)
+                burst = desc.burst_bytes(shape, np.float32)
+                sw_t = link.transfer_time(nbytes, burst,
+                                          issue_overhead=SW_ISSUE_OVERHEAD)
+                sw_u = link.utilization(nbytes, burst,
+                                        issue_overhead=SW_ISSUE_OVERHEAD)
+                prefix = f"fig4sim/{lname}/{size}/{tag}"
+                rows.append((f"{prefix}/sw_agu", sw_t * 1e6, sw_u))
+                for d in (3, 5, 9):
+                    t = link.transfer_time(nbytes, burst, pipeline_depth=d)
+                    u = link.utilization(nbytes, burst, pipeline_depth=d)
+                    rows.append((f"{prefix}/frontend_d{d}", t * 1e6, u))
+                u9 = link.utilization(nbytes, burst, pipeline_depth=9)
+                rows.append((f"{prefix}/ratio_d9", sw_t * 1e6,
+                             u9 / sw_u if sw_u else float("inf")))
+    return rows
+
+
+def run(csv=True, sim=False):
+    if sim:
+        rows = sim_rows()
+        if csv:
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived:.4f},")
+        return rows
     rows = []
     rng = np.random.default_rng(0)
     for size in SIZES:
@@ -83,7 +132,7 @@ def run(csv=True):
         rows.append((f"fig4/dbuf{d_buf}/bursts", float(bursts), vmem))
     if csv:
         for name, us, derived in rows:
-            print(f"{name},{us:.1f},{derived:.4f}")
+            print(f"{name},{us:.1f},{derived:.4f},")
     return rows
 
 

@@ -80,16 +80,16 @@ def run(sim: bool = False) -> None:
             out = P.apply_chain(desc.plugins,
                                 C.by_name(src).to_logical(x))
             wire = out.wire_nbytes() if isinstance(out, P.CTensor) else nbytes
-            print(f"fusion_{name}_sim,0.0,{nbytes / max(1, wire):.2f}")
+            print(f"fusion_{name}_sim,0.0,{nbytes / max(1, wire):.2f},")
             continue
         compiled = _time(lambda v: xdma.transfer(v, desc), x)
         fused = _time(lambda v, _d=C.describe(src, dst, *chain,
                                               backend="fused"):
                       xdma.transfer(v, _d), x)
         staged = _time(_staged(desc), x)
-        print(f"fusion_{name}_compiled,{compiled * 1e6:.1f},{staged / compiled:.2f}")
-        print(f"fusion_{name}_fusedxla,{fused * 1e6:.1f},{staged / fused:.2f}")
-        print(f"fusion_{name}_staged,{staged * 1e6:.1f},1.00")
+        print(f"fusion_{name}_compiled,{compiled * 1e6:.1f},{staged / compiled:.2f},")
+        print(f"fusion_{name}_fusedxla,{fused * 1e6:.1f},{staged / fused:.2f},")
+        print(f"fusion_{name}_staged,{staged * 1e6:.1f},1.00,")
 
 
 if __name__ == "__main__":

@@ -32,11 +32,11 @@ def run(csv=True, path=RESULTS):
         key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
         if "skipped" in r:
             if csv:
-                print(f"{key},skip,0.0")
+                print(f"{key},skip,0.0,")
             continue
         if "roofline_s" not in r:
             if csv:
-                print(f"{key},error,0.0")
+                print(f"{key},error,0.0,")
             continue
         t = r["roofline_s"]
         dom = max(t, key=t.get)
@@ -44,7 +44,7 @@ def run(csv=True, path=RESULTS):
         rows.append((key, step_us, r.get("roofline_fraction") or 0.0, dom,
                      r.get("useful_flop_ratio") or 0.0))
         if csv:
-            print(f"{key},{step_us:.1f},{r.get('roofline_fraction') or 0:.5f}")
+            print(f"{key},{step_us:.1f},{r.get('roofline_fraction') or 0:.5f},")
     return rows
 
 

@@ -1,22 +1,32 @@
 """Benchmark harness entry: one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (derived = utilization for Fig.4 and
-sched rows, acceleration ratio for Table III rows, roofline fraction for the
-dry-run-derived rows).
+Prints ``name,us_per_call,derived,contention_stalls`` CSV (derived =
+utilization for Fig.4 and sched rows, acceleration ratio for Table III rows,
+roofline fraction for the dry-run-derived rows; the fourth column is the
+simulator's contention stall in us, filled by the sections that compute it).
 
   PYTHONPATH=src python -m benchmarks.run [--only SECTION] [--list] [--sim]
+                                          [--json [PATH]]
 
 Sections live in one registry: adding a benchmark module here is the single
 step that wires it into ``--only``, ``--list``, and the default full run.
-``--sim`` asks sections that support it (``fusion``, ``sched``) to use the
-deterministic simulator only, executing nothing — the CI smoke mode.  In a
-full ``--sim`` sweep, sections with no simulator mode are *skipped* (a smoke
-run must stay cheap); ``--only SECTION --sim`` still runs that section for
-real if it has no sim mode.
+``--sim`` asks sections that support it (``fig4``, ``fusion``, ``sched``) to
+use the deterministic simulator only, executing nothing — the CI smoke mode.
+In a full ``--sim`` sweep, sections with no simulator mode are *skipped* (a
+smoke run must stay cheap); ``--only SECTION --sim`` still runs that section
+for real if it has no sim mode.
+
+``--json [PATH]`` writes the PR-4 perf snapshot (default ``BENCH_PR4.json``):
+measured relayout GB/s through the fused and generic-AGU Pallas backends,
+the simulated Fig. 4 per-link utilization sweep with the software-AGU vs
+Frontend ratio per traffic pattern, and the scheduler rows with their
+contention stalls.  CI uploads it as an artifact, so the repo accumulates a
+bench trajectory.
 """
 import argparse
 import importlib
 import inspect
+import json
 
 # section name -> (module under benchmarks/, one-line description)
 SECTIONS = {
@@ -43,6 +53,72 @@ def run_section(name: str, *, sim: bool = False, skip_unsimulated: bool = False)
     module.run(**({"sim": sim} if has_sim else {}))
 
 
+def relayout_gbps():
+    """Measured relayout throughput (GB/s, read+write) for the four legacy
+    traffic kinds through both local backends: ``fused`` (XLA composition)
+    and ``pallas`` (the generic AGU kernel, interpret mode on CPU)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import core as C
+
+    from .common import bench
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((512, 512)),
+                    jnp.float32)
+    nbytes = 2 * x.size * 4                       # one read + one write pass
+    cases = [("tile", "MN", "MNM8N128", False),
+             ("untile", "MNM8N128", "MN", False),
+             ("ttrans", "MNM8N128", "MNM8N128", True),
+             ("mntrans", "MN", "MN", True)]
+    rows = []
+    for tag, src, dst, transpose in cases:
+        xin = C.by_name(src).from_logical(x)
+        chain = [C.Transpose()] if transpose else []
+        for backend in ("fused", "pallas"):
+            desc = C.describe(src, dst, *chain, backend=backend)
+            t = bench(lambda v=xin, d=desc: C.xdma.transfer(v, d), iters=3)
+            rows.append((f"relayout/{tag}/{backend}", t * 1e6,
+                         nbytes / t / 1e9))
+    return rows
+
+
+def write_snapshot(path: str) -> None:
+    """The BENCH_PR4 perf snapshot: relayout GB/s + simulated utilization."""
+    from . import link_utilization, sched
+
+    fig4 = link_utilization.run(csv=False, sim=True)
+    sched_rows = sched.run(csv=False, sim=True)
+    gbps = relayout_gbps()
+    payload = {
+        "bench": "PR4",
+        "columns": {
+            "relayout_gbps": ["name", "us_per_call", "gbytes_per_s"],
+            "fig4sim": ["name", "simulated_us", "utilization_or_ratio"],
+            "sched": ["name", "makespan_us", "utilization_or_speedup",
+                      "contention_stalls_us"],
+        },
+        "sections": {
+            "relayout_gbps": [list(r) for r in gbps],
+            "fig4sim": [list(r) for r in fig4],
+            "sched": [list(r) for r in sched_rows],
+        },
+        # the paper's headline comparison axis (Fig. 4): simulated link
+        # utilization of Frontend (d_buf=9) over software address generation
+        "sw_vs_frontend_ratio_d9": {
+            name: derived for name, _, derived in fig4
+            if name.endswith("/ratio_d9")
+        },
+        "contention_stalls_us": {
+            r[0]: r[3] for r in sched_rows if len(r) > 3
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}: {len(payload['sections'])} sections, "
+          f"{len(payload['sw_vs_frontend_ratio_d9'])} fig4 ratios")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -52,12 +128,17 @@ def main() -> None:
                     help="list registered sections and exit")
     ap.add_argument("--sim", action="store_true",
                     help="simulator-only mode for sections that support it")
+    ap.add_argument("--json", nargs="?", const="BENCH_PR4.json", default=None,
+                    metavar="PATH", help="write the perf snapshot and exit")
     args = ap.parse_args()
     if args.list:
         for name, (module_name, blurb) in SECTIONS.items():
             print(f"{name:10s} benchmarks/{module_name}.py  {blurb}")
         return
-    print("name,us_per_call,derived")
+    if args.json:
+        write_snapshot(args.json)
+        return
+    print("name,us_per_call,derived,contention_stalls")
     for name in SECTIONS:
         if args.only in (None, name):
             run_section(name, sim=args.sim, skip_unsimulated=args.only is None)

@@ -18,7 +18,9 @@ the speedup; the simulator rows carry that).  With ``--sim`` nothing
 executes, making this the CI smoke.
 
 Rows: ``sched/<wl>/links<k>/{serial,dist}`` = simulated makespan (us) with
-mean per-link utilization as the derived column; ``.../speedup`` = serial
+mean per-link utilization as the derived column and the simulator's
+``contention_stall`` (us; data ready, link busy) as the fourth column —
+previously computed but dropped from the artifact; ``.../speedup`` = serial
 over distributed makespan.
 """
 from __future__ import annotations
@@ -125,9 +127,11 @@ def run(csv: bool = True, sim: bool = False):
             serial = simulate(serialize(tasks, topo.link_names[0]), topo)
             tag = f"sched/{workload}/links{k}"
             rows.append((f"{tag}/serial", serial.makespan * 1e6,
-                         serial.mean_link_utilization))
+                         serial.mean_link_utilization,
+                         serial.contention_stall * 1e6))
             rows.append((f"{tag}/dist", dist.makespan * 1e6,
-                         dist.mean_link_utilization))
+                         dist.mean_link_utilization,
+                         dist.contention_stall * 1e6))
             rows.append((f"{tag}/speedup", dist.makespan * 1e6,
                          serial.makespan / dist.makespan))
             if not sim:
@@ -136,8 +140,9 @@ def run(csv: bool = True, sim: bool = False):
                              t_serial / t_dist))
                 rows.append((f"{tag}/wall_serial", t_serial * 1e6, 1.0))
     if csv:
-        for name, us, derived in rows:
-            print(f"{name},{us:.1f},{derived:.4f}")
+        for name, us, derived, *stall in rows:
+            extra = f",{stall[0]:.2f}" if stall else ","
+            print(f"{name},{us:.1f},{derived:.4f}{extra}")
     return rows
 
 

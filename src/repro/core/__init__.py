@@ -1,7 +1,9 @@
 """repro.core — XDMA: layout-flexible data movement as a composable JAX module."""
 from .layouts import (  # noqa: F401
-    Layout, MN, MNM8N128, MNM16N128, MNM32N128, MNM8N8,
-    affine_pattern, AffinePattern, layout_for_dtype, by_name,
+    Layout, MN, NM, MNP64, MNM8N128, MNM16N128, MNM32N128, MNM8N8,
+    NMM8N128, KV4M8N128,
+    affine_pattern, AffinePattern, PatternPair, relayout_pair,
+    layout_for_dtype, by_name,
 )
 from .plugins import (  # noqa: F401
     Plugin, Identity, Transpose, Cast, Scale, BiasAdd,

@@ -22,6 +22,7 @@
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -33,82 +34,71 @@ from . import layouts as L
 from . import plugins as P
 
 __all__ = [
+    "sw_agu_loop",
     "sw_loop_1d_dma",
     "sw_loop_2d_dma",
     "copy_then_transform",
 ]
 
 
-def _runs_for(desc: XDMADescriptor, logical_shape):
-    """(run_length, src_offsets, dst_offsets) of the contiguous runs a 1D DMA
-    must issue to realize the descriptor, from the affine patterns."""
-    m, n = logical_shape[-2:]
-    tiled = desc.dst_layout if desc.dst_layout.is_tiled else desc.src_layout
-    tm, tn = tiled.tile if tiled.is_tiled else (1, n)
-    return tm, tn
+def sw_agu_loop(x: jnp.ndarray, desc: XDMADescriptor) -> jnp.ndarray:
+    """Software address generation over the composed affine pattern — the
+    paper's comparison axis, for ANY layout pair.
+
+    The descriptor's ``src⁻¹∘dst`` :class:`~repro.core.layouts.PatternPair`
+    is walked by a ``lax.fori_loop``: each iteration the *core* decodes the
+    run index into the pair's loop-nest digits, computes the (read, write)
+    address pair, and issues one both-sides-contiguous run to the 1D DMA
+    (``dynamic_slice`` / ``dynamic_update_slice`` on flat buffers).  For
+    transposing movements the contiguous run degenerates to one element —
+    exactly why software AGUs lose the Fig. 4 utilization race.  Supports
+    copy and single-``Transpose`` chains (what a loop + 1D DMA can do).
+    """
+    if desc.plugins and not (len(desc.plugins) == 1
+                             and isinstance(desc.plugins[0], P.Transpose)):
+        raise ValueError("software AGU baseline supports copy/transpose only")
+    transpose = bool(desc.plugins)
+    logical_in = desc.src_layout.logical_shape(x.shape)
+    pair = L.relayout_pair(desc.src_layout, desc.dst_layout, logical_in,
+                           transpose=transpose)
+    if pair is None:
+        raise ValueError(
+            f"{desc.src_layout.name}->{desc.dst_layout.name}: no common "
+            "loop-nest refinement; the software AGU has no pattern to walk")
+    out_logical = (logical_in[:-2] + (logical_in[-1], logical_in[-2])
+                   if transpose else tuple(logical_in))
+    run, bounds, src_strides, dst_strides = pair.runs()
+    n_runs = math.prod(bounds)
+    suffix = []
+    acc = 1
+    for b in reversed(bounds):
+        suffix.append(acc)
+        acc *= b
+    suffix.reverse()
+
+    src_flat = x.reshape(-1)
+    dst_phys = desc.dst_layout.physical_shape(out_logical)
+    dst_flat = jnp.zeros((math.prod(dst_phys),), dtype=x.dtype)
+
+    def body(r, dst):
+        sa = jnp.int32(pair.src_base)
+        da = jnp.int32(pair.dst_base)
+        for b, sp, ss, ds in zip(bounds, suffix, src_strides, dst_strides):
+            digit = (r // sp) % b
+            sa = sa + digit * ss
+            da = da + digit * ds
+        burst = lax.dynamic_slice(src_flat, (sa,), (run,))
+        return lax.dynamic_update_slice(dst, burst, (da,))
+
+    dst_flat = lax.fori_loop(0, n_runs, body, dst_flat)
+    return dst_flat.reshape(dst_phys)
 
 
 def sw_loop_1d_dma(x: jnp.ndarray, desc: XDMADescriptor) -> jnp.ndarray:
-    """Setup ①: per-tile-row contiguous copies driven by a software loop."""
-    if desc.plugins and not (len(desc.plugins) == 1 and isinstance(desc.plugins[0], P.Transpose)):
-        raise ValueError("software 1D-DMA baseline supports copy/transpose only")
-    transpose = bool(desc.plugins)
-    logical_in = desc.src_layout.logical_shape(x.shape)
-    m, n = logical_in[-2:]
-    out_logical = (n, m) if transpose else (m, n)
-    tm, tn = _runs_for(desc, out_logical)
-    om, on = out_logical
-    gm, gn = om // tm, on // tn
-
-    src_flat = x.reshape(-1)
-    src_pat = L.affine_pattern(desc.src_layout, logical_in)
-    dst_pat = L.affine_pattern(desc.dst_layout, out_logical)
-    dst_flat = jnp.zeros((om * on,), dtype=x.dtype)
-
-    # run index space: (gm, tm, gn) rows of tn contiguous elements in dst order
-    n_runs = gm * tm * gn
-
-    s_strides = jnp.asarray(src_pat.strides, jnp.int32)
-    d_strides = jnp.asarray(dst_pat.strides, jnp.int32)
-
-    def src_addr_of_logical(i, j):
-        # address of logical (i, j) in the *source* physical buffer
-        if desc.src_layout.is_tiled:
-            stm, stn = desc.src_layout.tile
-            return ((i // stm) * s_strides[0] + (i % stm) * s_strides[1]
-                    + (j // stn) * s_strides[2] + (j % stn) * s_strides[3])
-        return i * s_strides[0] + j * s_strides[1]
-
-    def dst_addr_of_logical(i, j):
-        if desc.dst_layout.is_tiled:
-            dtm, dtn = desc.dst_layout.tile
-            return ((i // dtm) * d_strides[0] + (i % dtm) * d_strides[1]
-                    + (j // dtn) * d_strides[2] + (j % dtn) * d_strides[3])
-        return i * d_strides[0] + j * d_strides[1]
-
-    def body(r, dst):
-        # decode run -> (logical row i, starting col j0) in OUTPUT coordinates
-        bi = r // (tm * gn)
-        rem = r % (tm * gn)
-        ri = rem // gn
-        bj = rem % gn
-        i = bi * tm + ri
-        j0 = bj * tn
-        if transpose:
-            # output (i, j0..j0+tn) reads source logical (j0..j0+tn, i): strided!
-            # a 1D DMA must do element-wise gathers -> tn singleton copies
-            def inner(k, d):
-                sa = src_addr_of_logical(j0 + k, i)
-                da = dst_addr_of_logical(i, j0 + k)
-                return lax.dynamic_update_slice(d, lax.dynamic_slice(src_flat, (sa,), (1,)), (da,))
-            return lax.fori_loop(0, tn, inner, dst)
-        sa = src_addr_of_logical(i, j0)
-        da = dst_addr_of_logical(i, j0)
-        run = lax.dynamic_slice(src_flat, (sa,), (tn,))
-        return lax.dynamic_update_slice(dst, run, (da,))
-
-    dst_flat = lax.fori_loop(0, n_runs, body, dst_flat)
-    return dst_flat.reshape(desc.dst_layout.physical_shape(out_logical))
+    """Setup ①: software loop + 1D DMA — contiguous runs only.  Since the
+    AGU refactor this is :func:`sw_agu_loop` (same runs, same addresses,
+    derived from the pattern pair instead of hand-written index math)."""
+    return sw_agu_loop(x, desc)
 
 
 def sw_loop_2d_dma(x: jnp.ndarray, desc: XDMADescriptor) -> jnp.ndarray:

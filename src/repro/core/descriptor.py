@@ -213,21 +213,35 @@ class XDMADescriptor:
 
     def src_patterns(self, logical_shape: Sequence[int]) -> Tuple[L.AffinePattern, ...]:
         """Per-channel address generators: N_C parallel stream lanes, each
-        walking a contiguous 1/N_C slice of the logical rows from its own
-        base address (the paper's multi-channel Frontend).  channels=1
-        degenerates to [src_pattern]."""
+        walking the same nest with a shrunk outermost extent from its own
+        base address (the paper's multi-channel Frontend) — this is
+        :meth:`~repro.core.layouts.AffinePattern.split` on the pattern IR.
+        channels=1 degenerates to [src_pattern]."""
         self.validate(logical_shape)
-        full = self.src_pattern(logical_shape)
-        if self.channels == 1:
-            return (full,)
-        m, n = logical_shape[-2], logical_shape[-1]
-        rows = m // self.channels
-        lane_shape = tuple(logical_shape[:-2]) + (rows, n)
-        lane = L.affine_pattern(self.src.layout, lane_shape)
-        # a lane's row block starts rows*n elements after the previous one's
-        # in both MN and tiled physical order (validate() checks alignment)
-        return tuple(dataclasses.replace(lane, base=c * rows * n)
-                     for c in range(self.channels))
+        return self.src_pattern(logical_shape).split(self.channels)
+
+    def pattern_pair(self, in_logical_shape: Sequence[int]) -> Optional[L.PatternPair]:
+        """The composed ``src⁻¹∘dst`` relayout pattern of this movement, when
+        the on-stream chain is a pure relayout (empty, or exactly one
+        ``Transpose``): the IR the generic AGU kernel, the software-AGU
+        baseline, and the link cost model share.  None for plugin-carrying
+        chains or incompatible nests."""
+        chain = self.plugins
+        transpose = len(chain) == 1 and isinstance(chain[0], P.Transpose)
+        if chain and not transpose:
+            return None
+        return L.relayout_pair(self.src.layout, self.dst.layout,
+                               tuple(in_logical_shape), transpose=transpose)
+
+    def burst_bytes(self, in_logical_shape: Sequence[int], dtype) -> Optional[int]:
+        """Bytes per address-generator burst on the link (pattern contiguity
+        → per-link utilization in the simulator).  None when no pattern pair
+        exists; the simulator then prices the transfer as one burst."""
+        pair = self.pattern_pair(in_logical_shape)
+        if pair is None:
+            return None
+        import jax.numpy as jnp
+        return pair.burst_length() * jnp.dtype(dtype).itemsize
 
     def validate(self, in_logical_shape: Sequence[int]) -> None:
         self.src.layout.check(in_logical_shape)
@@ -238,13 +252,23 @@ class XDMADescriptor:
             raise ValueError("channels must be >= 1")
         if self.channels > 1:
             m = in_logical_shape[-2]
-            if m % self.channels:
+            if len(in_logical_shape) == 2:
+                if m % self.channels:
+                    raise ValueError(
+                        f"logical rows {m} not divisible by channels={self.channels}")
+                if self.src.layout.is_tiled and (m // self.channels) % self.src.layout.tile[0]:
+                    raise ValueError(
+                        f"lane rows {m // self.channels} not aligned to src tile "
+                        f"rows {self.src.layout.tile[0]}")
+            # the lane split partitions the pattern's outermost loop level
+            # (for rank-3+ that is the lead batch dim, not the rows the
+            # 2D checks above cover) — validate what split() will require
+            outer = L.affine_pattern(self.src.layout,
+                                     tuple(in_logical_shape)).bounds[0]
+            if outer % self.channels:
                 raise ValueError(
-                    f"logical rows {m} not divisible by channels={self.channels}")
-            if self.src.layout.is_tiled and (m // self.channels) % self.src.layout.tile[0]:
-                raise ValueError(
-                    f"lane rows {m // self.channels} not aligned to src tile "
-                    f"rows {self.src.layout.tile[0]}")
+                    f"outermost address-pattern extent {outer} not divisible "
+                    f"by channels={self.channels}")
 
     def summary(self) -> str:
         def chain(ps):

@@ -10,11 +10,14 @@ Two lowerings of the same descriptor:
   plugin cascade, writer (logical->physical).  Under ``jax.jit`` XLA fuses
   this into a single HBM pass (read once, write once) — the software analogue
   of the hardware datapath in paper Fig. 2(a).
-* ``xdma_copy_pallas`` — the TPU-native lowering via the Pallas relayout
-  kernel in ``repro.kernels`` (explicit grid = N-D address generator,
-  BlockSpec = stream engine, d_buf = burst/pipeline depth).  Used when the
-  descriptor is a pure 2D relayout/transpose; falls back to the fused path
-  otherwise.  On this CPU container the kernel runs in interpret mode.
+* ``xdma_copy_pallas`` — the TPU-native lowering via the generic AGU kernel
+  in ``repro.kernels.agu`` (grid + BlockSpecs synthesized from the layout
+  pair's composed affine pattern; d_buf = burst/pipeline depth).  Kernel
+  selection is by *pattern*, not by layout special cases: any 2D relayout /
+  transpose the planner can express lowers through the one kernel, the rest
+  (plugin chains, rank > 2, incompatible nests) falls back to the fused path
+  — ``repro.kernels.agu.agu_stats()`` records why.  On this CPU container
+  the kernel runs in interpret mode.
 """
 from __future__ import annotations
 
@@ -75,16 +78,19 @@ def xdma_copy_jit(x: jnp.ndarray, desc: XDMADescriptor) -> jnp.ndarray:
 
 def xdma_copy_pallas(x: jnp.ndarray, desc: XDMADescriptor, *,
                      interpret: bool = True) -> jnp.ndarray:
-    """TPU-native lowering through the Pallas relayout kernel.
+    """TPU-native lowering through the generic AGU kernel.
 
     Supports pure relayout and relayout+transpose on 2D logical data (the
-    paper's Fig. 4 / Table III workloads).  Other plugin chains fall back to
-    the fused XLA path — they fuse identically there.
+    paper's Fig. 4 / Table III workloads) for ANY layout pair the pattern
+    planner covers.  Other plugin chains fall back to the fused XLA path —
+    they fuse identically there (and the fallback is tallied in
+    ``repro.kernels.agu.agu_stats()``).
     """
-    from repro.kernels import ops as kops  # local import: keep core importable w/o kernels
+    from repro.kernels import agu, ops as kops  # local import: keep core importable w/o kernels
 
     pure_transpose = (len(desc.plugins) == 1 and isinstance(desc.plugins[0], P.Transpose))
     if desc.plugins and not pure_transpose:
+        agu.record_fallback("plugin-chain")
         return xdma_copy(x, desc)
     return kops.relayout(
         x,

@@ -100,22 +100,14 @@ def can_fuse(desc: XDMADescriptor) -> Tuple[bool, str]:
 
 # -- kernel construction -----------------------------------------------------
 def _read_stage(blk: jnp.ndarray, layout: L.Layout) -> jnp.ndarray:
-    from repro.kernels.relayout import untile_block
-    if not layout.is_tiled:
-        return blk
-    if blk.ndim == 4:
-        return untile_block(blk)
-    return layout.to_logical(blk)       # leading batch dims: layout algebra
+    # The layout algebra applied to a VMEM-resident block: a BlockSpec slab
+    # of a physical buffer is itself the physical image of its logical slab,
+    # so the whole-buffer conversion is also the per-burst kernel stage.
+    return layout.to_logical(blk)
 
 
 def _write_stage(v: jnp.ndarray, layout: L.Layout) -> jnp.ndarray:
-    from repro.kernels.relayout import tile_block
-    if not layout.is_tiled:
-        return v
-    if v.ndim == 2:
-        tm, tn = layout.tile
-        return tile_block(v, tm, tn)
-    return layout.from_logical(v)       # leading batch dims: layout algebra
+    return layout.from_logical(v)
 
 
 def _chain_consts(chain: Sequence[P.Plugin]) -> Tuple[Tuple[int, ...], Tuple[Any, ...]]:
@@ -194,21 +186,23 @@ def _compile_block(chain, src_layout, dst_layout, in_aval, interpret):
 
 def _burst_rows(chain, src_layout, dst_layout, m: int, d_buf: int) -> Optional[int]:
     """Rows per streamed burst, or None when the geometry forces the block
-    template.  Base granularity is the lcm of the two tile heights (the
-    smallest slab both Frontends can relayout); ``d_buf`` bursts stack on
-    top of it exactly as in the relayout kernels."""
-    from repro.kernels.relayout import _eff_d_buf
-    base = 1
-    for layout in (src_layout, dst_layout):
-        if layout.is_tiled:
-            base = math.lcm(base, layout.tile[0])
+    template.  Base granularity is the lcm of the two layouts' row-tile
+    factors (the smallest slab both Frontends can relayout); ``d_buf``
+    bursts stack on top of it exactly as in the AGU relayout kernel.  Row-
+    stride padding cannot be row-slabbed (the padding rows sit at the end of
+    the buffer), so it falls to the block template."""
+    from repro.kernels.agu import eff_d_buf
+    if src_layout.dim_pad(2, 0) or dst_layout.dim_pad(2, 0):
+        return None
+    base = math.lcm(src_layout.dim_tile(2, 0), dst_layout.dim_tile(2, 0))
     if m % base:
         return None
-    return base * _eff_d_buf(m // base, d_buf)
+    return base * eff_d_buf(m // base, d_buf)
 
 
 def _compile_streamed(chain, src_layout, dst_layout, in_aval, d_buf, interpret):
     """Row-burst template for all-streaming chains (d_buf-deep bursts)."""
+    from repro.kernels.agu import slab_spec
     logical = src_layout.logical_shape(in_aval.shape)
     if len(logical) != 2:
         return None
@@ -220,11 +214,9 @@ def _compile_streamed(chain, src_layout, dst_layout, in_aval, d_buf, interpret):
     counts, consts = _chain_consts(chain)
 
     def spec(layout, nn):
-        if layout.is_tiled:
-            tm, tn = layout.tile
-            return pl.BlockSpec((rows // tm, nn // tn, tm, tn),
-                                lambda i: (i, 0, 0, 0))
-        return pl.BlockSpec((rows, nn), lambda i: (i, 0))
+        # full-width row slab, synthesized from the layout IR (tiled dims
+        # become (grid, tile) block dims; perm/pad ride along)
+        return slab_spec(layout, rows, nn, (m, nn), 0, None)
 
     const_specs = [pl.BlockSpec(c.shape, lambda i, _nd=len(c.shape): (0,) * _nd)
                    for c in consts]

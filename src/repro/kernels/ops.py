@@ -1,18 +1,19 @@
 """jit'd public wrappers for the Pallas kernels (the `ops` layer).
 
-``relayout`` dispatches a :class:`repro.core.XDMADescriptor`-shaped request
-to the right kernel case; anything outside kernel coverage falls back to the
-fused XLA path in ``repro.core.engine`` (identical fusion semantics).
+``relayout`` lowers a layout pair through the generic AGU kernel
+(:mod:`repro.kernels.agu`): the planner composes the two affine patterns and
+synthesizes the grid/BlockSpecs; pairs outside kernel coverage (no common
+loop-nest refinement, row-stride padding, rank > 2) fall back to the fused
+XLA composition — identical fusion semantics, and
+:func:`repro.kernels.agu.agu_stats` records the reason (the CI parity gate
+watches it).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
 from repro.core import layouts as L
-from . import relayout as RK
+from . import agu
 from .fused_rmsnorm_relayout import rmsnorm_relayout
 from .quant import quantize_tiled
 
@@ -22,30 +23,15 @@ __all__ = ["relayout", "rmsnorm_relayout", "quantize_tiled"]
 def relayout(x: jnp.ndarray, *, src_layout: L.Layout, dst_layout: L.Layout,
              transpose: bool = False, d_buf: int = 9,
              interpret: bool = True) -> jnp.ndarray:
-    src_t, dst_t = src_layout.is_tiled, dst_layout.is_tiled
-
-    if not transpose:
-        if not src_t and dst_t:
-            return RK.tile(x, dst_layout.tile, d_buf=d_buf, interpret=interpret)
-        if src_t and not dst_t:
-            return RK.untile(x, d_buf=d_buf, interpret=interpret)
-        if not src_t and not dst_t:
-            return x  # MN -> MN copy is the identity stream
-        if src_layout.tile == dst_layout.tile:
-            return x
-        # retile: untile then tile (two kernel passes; XLA may fuse in interp)
-        return RK.tile(RK.untile(x, d_buf=d_buf, interpret=interpret),
-                       dst_layout.tile, d_buf=d_buf, interpret=interpret)
-
-    # transpose cases
-    if src_t and dst_t and src_layout.tile == dst_layout.tile:
-        tm, tn = src_layout.tile
-        if tn % tm == 0 and (x.shape[0] * tm) % tn == 0:
-            return RK.tiled_transpose(x, d_buf=d_buf, interpret=interpret)
-    if not src_t and not dst_t:
-        m, n = x.shape
-        if m % 128 == 0 and n % 128 == 0:
-            return RK.mn_transpose(x, d_buf=d_buf, interpret=interpret)
-    # fallback: logical-path transpose + relayout
-    logical = src_layout.to_logical(x)
-    return dst_layout.from_logical(jnp.swapaxes(logical, -1, -2))
+    logical = src_layout.logical_shape(x.shape)
+    plan, reason = agu.plan_relayout(src_layout, dst_layout, logical,
+                                     transpose=transpose, d_buf=d_buf)
+    if plan is not None:
+        agu.record_plan(plan)
+        return plan.run(x, interpret=interpret)
+    agu.record_fallback(reason)
+    # fallback: logical-path relayout (XLA fuses it into one stream)
+    v = src_layout.to_logical(x)
+    if transpose:
+        v = jnp.swapaxes(v, -1, -2)
+    return dst_layout.from_logical(v)

@@ -1,48 +1,37 @@
-"""Pallas TPU kernel: the XDMA Frontend as an explicit N-D affine stream engine.
+"""Legacy relayout entry points, now thin wrappers over the generic AGU kernel.
 
-The ``pallas_call`` grid + BlockSpec ``index_map`` *is* the hardware address
-generator of paper Fig. 2(b): each grid step streams one burst of tiles from
-HBM into VMEM, permutes it to the destination layout in-register, and streams
-it back out.  ``d_buf`` — the paper's stream-buffer depth (swept 3/5/9 in
-Fig. 4) — is the burst depth: how many destination tiles are resident in VMEM
-per grid step.  Deeper bursts amortize per-step overhead and hide HBM latency
-(the TPU analogue of absorbing SRAM bank conflicts; DESIGN.md §2).
+The seed hand-wrote four special-case Pallas kernels here (tile / untile /
+tiled-transpose / mn-transpose — the paper's Fig. 4 / Table III traffic).
+Since the N-D affine Frontend refactor (DESIGN.md §8) they are all instances
+of the ONE pattern-driven stream kernel in :mod:`repro.kernels.agu`: the grid
+and BlockSpecs are synthesized from the layout pair's composed affine
+pattern, and ``d_buf`` — the paper's stream-buffer depth, swept 3/5/9 in
+Fig. 4 — sets the burst depth exactly as before.  Outputs are bit-identical
+to the seed kernels (everything here is a pure element permutation); the
+parity tests in ``tests/test_agu.py`` pin that.
 
-Four kernel cases (all the paper's Fig. 4 / Table III traffic):
-  tile      MN            -> MNMtmN tn      (Prefill 2)
-  untile    MNMtmNtn      -> MN             (Prefill 1)
-  ttrans    MNMtmNtn      -> MNMtmNtn, transposed   (Load 1-3)
-  mntrans   MN            -> MN, transposed
-
-Tile geometry is TPU-native: tn == 128 (lane width), tm ∈ {8, 16, 32}
-(f32/bf16/int8 VREG sublane counts).
+``tile_block`` / ``untile_block`` remain as the in-VMEM relayout stages the
+plugin compiler documentation references; they are the 2D special case of
+``Layout.from_logical`` / ``Layout.to_logical`` applied to a block.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 from repro.core import layouts as L
 
+from .agu import agu_relayout, eff_d_buf
 
-def _eff_d_buf(extent: int, d_buf: int) -> int:
-    """Largest burst depth <= d_buf that divides the streaming extent."""
-    d = max(1, min(d_buf, extent))
-    while extent % d:
-        d -= 1
-    return d
+# Back-compat alias: quant.py and the benchmarks import the burst-depth
+# helper under its historical private name.
+_eff_d_buf = eff_d_buf
 
 
 # --------------------------------------------------------------------------
-# Shared in-VMEM relayout stages.  These are the reader/writer halves of the
-# XDMA Frontend expressed on a block already resident in VMEM: the tile /
-# untile kernels below use them per burst, and the plugin compiler
-# (repro.core.plugin_compiler) emits them as the first/last stage of its
-# fused reader -> chain -> writer kernels.
+# Shared in-VMEM relayout stages: the 2D special case of the layout algebra
+# on a block already resident in VMEM (see Layout.to_logical/from_logical).
 # --------------------------------------------------------------------------
 def tile_block(x: jnp.ndarray, tm: int, tn: int) -> jnp.ndarray:
     """Logical (M, N) block -> physical (M//tm, N//tn, tm, tn) tile block."""
@@ -56,110 +45,38 @@ def untile_block(blk: jnp.ndarray) -> jnp.ndarray:
     return blk.transpose(0, 2, 1, 3).reshape(gm * tm, gn * tn)
 
 
-# --------------------------------------------------------------------------
-# Case: tile  (MN -> tiled)
-# --------------------------------------------------------------------------
-def _tile_kernel(src_ref, dst_ref, *, tm: int, tn: int, d: int):
-    # src block: (tm, d*tn) logical rows; dst block: (1, d, tm, tn)
-    dst_ref[...] = tile_block(src_ref[...], tm, tn)
+def _tiled(tile_shape: Tuple[int, int]) -> L.Layout:
+    tm, tn = tile_shape
+    return L.Layout((int(tm), int(tn)), f"MNM{tm}N{tn}")
 
 
 def tile(x: jnp.ndarray, tile_shape: Tuple[int, int], *, d_buf: int = 9,
          interpret: bool = True) -> jnp.ndarray:
-    m, n = x.shape
-    tm, tn = tile_shape
-    gm, gn = m // tm, n // tn
-    d = _eff_d_buf(gn, d_buf)
-    grid = (gm, gn // d)
-    return pl.pallas_call(
-        functools.partial(_tile_kernel, tm=tm, tn=tn, d=d),
-        grid=grid,
-        in_specs=[pl.BlockSpec((tm, d * tn), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((1, d, tm, tn), lambda i, j: (i, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((gm, gn, tm, tn), x.dtype),
-        interpret=interpret,
-    )(x)
-
-
-# --------------------------------------------------------------------------
-# Case: untile  (tiled -> MN)
-# --------------------------------------------------------------------------
-def _untile_kernel(src_ref, dst_ref, *, tm: int, tn: int, d: int):
-    # src block: (1, d, tm, tn) tiles; dst block: (tm, d*tn) logical rows
-    dst_ref[...] = untile_block(src_ref[...])
+    """MN -> MNMtmNtn (Prefill 2)."""
+    return agu_relayout(x, src_layout=L.MN, dst_layout=_tiled(tile_shape),
+                        d_buf=d_buf, interpret=interpret)
 
 
 def untile(x: jnp.ndarray, *, d_buf: int = 9, interpret: bool = True) -> jnp.ndarray:
-    gm, gn, tm, tn = x.shape
-    d = _eff_d_buf(gn, d_buf)
-    grid = (gm, gn // d)
-    return pl.pallas_call(
-        functools.partial(_untile_kernel, tm=tm, tn=tn, d=d),
-        grid=grid,
-        in_specs=[pl.BlockSpec((1, d, tm, tn), lambda i, j: (i, j, 0, 0))],
-        out_specs=pl.BlockSpec((tm, d * tn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gm * tm, gn * tn), x.dtype),
-        interpret=interpret,
-    )(x)
-
-
-# --------------------------------------------------------------------------
-# Case: ttrans  (tiled -> tiled, logical transpose; the KV-cache Load op)
-# Superblock: lcm square of (tm, tn) in logical space => (tn, tn) with tn=128.
-# --------------------------------------------------------------------------
-def _ttrans_kernel(src_ref, dst_ref, *, tm: int, tn: int, d: int):
-    r = tn // tm                                   # tiles per superblock side
-    blk = src_ref[...]                             # (r, d, tm, tn)
-    # -> logical (tn, d*tn)
-    logical = blk.transpose(0, 2, 1, 3).reshape(tn, d * tn)
-    lt = logical.T                                 # (d*tn, tn)
-    dst_ref[...] = lt.reshape(d * r, tm, tn)[:, None]
+    """MNMtmNtn -> MN (Prefill 1); the tile geometry comes from the buffer."""
+    tm, tn = x.shape[-2], x.shape[-1]
+    return agu_relayout(x, src_layout=_tiled((tm, tn)), dst_layout=L.MN,
+                        d_buf=d_buf, interpret=interpret)
 
 
 def tiled_transpose(x: jnp.ndarray, *, d_buf: int = 9,
                     interpret: bool = True) -> jnp.ndarray:
+    """MNMtmNtn -> MNMtmNtn, logically transposed (the KV-cache Load op)."""
     gm, gn, tm, tn = x.shape
-    if tn % tm:
-        raise ValueError(f"tiled_transpose needs tn % tm == 0, got {(tm, tn)}")
-    r = tn // tm
-    m, n = gm * tm, gn * tn
-    if m % tn:
-        raise ValueError(f"logical rows {m} must divide superblock {tn}")
-    sm, sn = m // tn, n // tn                      # superblock grid
-    d = _eff_d_buf(sn, d_buf)
-    grid = (sn // d, sm)                           # (output row-superblocks/d, col)
-    return pl.pallas_call(
-        functools.partial(_ttrans_kernel, tm=tm, tn=tn, d=d),
-        grid=grid,
-        # src: logical rows j*tn.., cols i*d*tn.. => tile rows (j*r..), tile cols (i*d..)
-        in_specs=[pl.BlockSpec((r, d, tm, tn), lambda i, j: (j, i, 0, 0))],
-        # dst: tile rows i*d*r.., tile col j
-        out_specs=pl.BlockSpec((d * r, 1, tm, tn), lambda i, j: (i, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n // tm, m // tn, tm, tn), x.dtype),
-        interpret=interpret,
-    )(x)
-
-
-# --------------------------------------------------------------------------
-# Case: mntrans  (MN -> MN transpose)
-# --------------------------------------------------------------------------
-def _mntrans_kernel(src_ref, dst_ref):
-    dst_ref[...] = src_ref[...].T
+    lay = _tiled((tm, tn))
+    return agu_relayout(x, src_layout=lay, dst_layout=lay, transpose=True,
+                        d_buf=d_buf, interpret=interpret)
 
 
 def mn_transpose(x: jnp.ndarray, *, block: int = 128, d_buf: int = 9,
                  interpret: bool = True) -> jnp.ndarray:
-    m, n = x.shape
-    bm = min(block, m)
-    bn = min(block * _eff_d_buf(max(1, n // block), d_buf), n)
-    if m % bm or n % bn:
-        raise ValueError(f"({m},{n}) not divisible by block ({bm},{bn})")
-    grid = (m // bm, n // bn)
-    return pl.pallas_call(
-        _mntrans_kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (j, i)),
-        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
-        interpret=interpret,
-    )(x)
+    """MN -> MN, transposed.  ``block`` is retained for API compatibility;
+    the AGU planner picks the superblock from the pattern."""
+    del block
+    return agu_relayout(x, src_layout=L.MN, dst_layout=L.MN, transpose=True,
+                        d_buf=d_buf, interpret=interpret)

@@ -53,6 +53,20 @@ _ROUND_CACHE: "collections.OrderedDict[Any, Callable]" = collections.OrderedDict
 _ROUND_CACHE_CAPACITY = 256
 
 
+def _burst_bytes(desc: XDMADescriptor, value: Any) -> Optional[int]:
+    """Pattern-contiguity burst of one dispatched task, from the descriptor's
+    composed affine pattern (None when no pattern applies — payload pytrees,
+    plugin chains, remote links — which keeps the one-burst pricing)."""
+    shape = getattr(value, "shape", None)
+    dtype = getattr(value, "dtype", None)
+    if shape is None or dtype is None or len(shape) < 2:
+        return None
+    try:
+        return desc.burst_bytes(desc.src.layout.logical_shape(shape), dtype)
+    except (ValueError, KeyError):
+        return None
+
+
 def _nbytes(value: Any) -> int:
     """Payload bytes of an array / QTensor / pytree (works on tracers)."""
     total = 0
@@ -99,6 +113,7 @@ class _Task:
     inputs: Tuple[Any, ...] = ()         # arrays or XDMAFutures
     cost_s: float = 0.0
     nbytes: Optional[int] = None
+    burst_bytes: Optional[int] = None    # pattern contiguity (link pricing)
     label: str = ""
     done: bool = False
     value: Any = None
@@ -251,6 +266,8 @@ class DistributedScheduler:
             if t.nbytes is None:
                 t.nbytes = (_nbytes(inputs[i]) + _nbytes(t.value)
                             if t.kind == "xdma" else 0)
+            if t.burst_bytes is None and t.kind == "xdma":
+                t.burst_bytes = _burst_bytes(t.desc, inputs[i])
             t.done = True
             t.round = self._rounds
             self._heads[t.resource] += 1
@@ -285,7 +302,10 @@ class DistributedScheduler:
             t = self._tasks[tid]
             out.append(SimTask(id=t.id, resource=t.resource,
                                nbytes=int(t.nbytes or 0), deps=t.deps,
-                               cost_s=t.cost_s, label=t.label))
+                               cost_s=t.cost_s, label=t.label,
+                               burst_bytes=t.burst_bytes,
+                               pipeline_depth=(t.desc.d_buf if t.desc is not None
+                                               else 1)))
         return out
 
     def report(self) -> SimReport:

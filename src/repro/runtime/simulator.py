@@ -24,7 +24,7 @@ Semantics:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .topology import Topology
 
@@ -36,7 +36,15 @@ __all__ = ["SimTask", "Span", "SimReport", "simulate", "serialize",
 class SimTask:
     """One scheduled task: ``resource`` is a topology link name (transfer) or
     any other string (a compute engine).  ``deps`` are task ids that must end
-    before this task may start."""
+    before this task may start.
+
+    ``burst_bytes`` / ``issue_overhead_s`` / ``pipeline_depth`` price the
+    transfer by its address pattern (see ``Link.transfer_time``): the
+    contiguous run of the descriptor's composed affine pattern, the per-burst
+    address-issue cost (None = the link's hardware AGU default; pass
+    ``topology.SW_ISSUE_OVERHEAD`` for software address generation), and the
+    ``d_buf`` stream-buffer depth amortizing it.  All default to the legacy
+    one-burst model."""
 
     id: int
     resource: str
@@ -44,6 +52,9 @@ class SimTask:
     deps: Tuple[int, ...] = ()
     cost_s: float = 0.0                 # duration when resource is not a link
     label: str = ""
+    burst_bytes: Optional[int] = None
+    issue_overhead_s: Optional[float] = None
+    pipeline_depth: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,7 +150,10 @@ def simulate(tasks: Sequence[SimTask], topology: Topology) -> SimReport:
                 ready = max((end[d] for d in t.deps), default=0.0)
                 start = max(ready, free[res])
                 if t.resource in topology:
-                    dur = topology.link(t.resource).transfer_time(t.nbytes)
+                    dur = topology.link(t.resource).transfer_time(
+                        t.nbytes, t.burst_bytes,
+                        issue_overhead=t.issue_overhead_s,
+                        pipeline_depth=t.pipeline_depth)
                 else:
                     dur = max(0.0, float(t.cost_s))
                 stop = start + dur
@@ -205,7 +219,8 @@ def queue_sim_tasks(queue, in_shape: Sequence[int], in_dtype,
                     link: str, *, start_id: int = 0) -> List[SimTask]:
     """SimTasks for an :class:`~repro.core.api.XDMAQueue`: one chained task
     per descriptor on ``link``, payload sizes derived from the queue's own
-    shape/dtype contracts (no execution needed)."""
+    shape/dtype contracts and burst geometry from the descriptor's composed
+    affine pattern (no execution needed)."""
     import numpy as np
 
     tasks: List[SimTask] = []
@@ -219,7 +234,9 @@ def queue_sim_tasks(queue, in_shape: Sequence[int], in_dtype,
                   + int(np.prod(out_shape)) * np.dtype(out_dtype).itemsize)
         tid = start_id + i
         tasks.append(SimTask(id=tid, resource=link, nbytes=nbytes, deps=prev,
-                             label=f"{queue.name}[{i}]"))
+                             label=f"{queue.name}[{i}]",
+                             burst_bytes=desc.burst_bytes(shape, dtype),
+                             pipeline_depth=desc.d_buf))
         prev = (tid,)
         shape, dtype = out_shape, out_dtype
     return tasks

@@ -34,6 +34,12 @@ __all__ = ["Link", "Topology", "DEFAULT_BANDWIDTH", "DEFAULT_LATENCY"]
 DEFAULT_BANDWIDTH = 100e9       # bytes / second
 DEFAULT_LATENCY = 1e-6          # seconds
 DEFAULT_WIDTH = 64              # bytes per beat (512-bit link)
+# Per-burst re-issue cost of a *hardware* address generator (the Frontend
+# computes the next burst address in a pipeline stage); software address
+# generation pays the core's loop + DMA-programming cost per burst instead —
+# the gap between these two constants is the paper's Fig. 4 axis.
+DEFAULT_BURST_OVERHEAD = 50e-9  # seconds per burst, hardware AGU
+SW_ISSUE_OVERHEAD = 1e-6        # seconds per burst, software loop + 1D DMA
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,7 +48,9 @@ class Link:
 
     ``bandwidth`` is bytes/s, ``latency`` the per-task fixed cost (CFG + first
     beat), ``width`` the beat size in bytes (transfers are rounded up to whole
-    beats, the hardware burst granularity).
+    beats, the hardware burst granularity), ``burst_overhead`` the per-burst
+    address re-issue cost when a transfer is priced by its address pattern
+    (see :meth:`transfer_time`).
     """
 
     name: str
@@ -51,6 +59,7 @@ class Link:
     bandwidth: float = DEFAULT_BANDWIDTH
     latency: float = DEFAULT_LATENCY
     width: int = DEFAULT_WIDTH
+    burst_overhead: float = DEFAULT_BURST_OVERHEAD
 
     def __post_init__(self):
         if self.bandwidth <= 0:
@@ -59,11 +68,46 @@ class Link:
             raise ValueError(f"link {self.name!r}: latency must be >= 0")
         if self.width < 1:
             raise ValueError(f"link {self.name!r}: width must be >= 1")
+        if self.burst_overhead < 0:
+            raise ValueError(f"link {self.name!r}: burst_overhead must be >= 0")
 
-    def transfer_time(self, nbytes: int) -> float:
-        """Deterministic cost model: latency + beat-rounded payload time."""
+    def transfer_time(self, nbytes: int, burst_bytes: Optional[int] = None, *,
+                      issue_overhead: Optional[float] = None,
+                      pipeline_depth: int = 1) -> float:
+        """Deterministic cost model: latency + beat-rounded payload time,
+        plus — when the transfer's address pattern is known — a per-burst
+        address-issue cost.
+
+        ``burst_bytes`` is the pattern's contiguous run (see
+        ``AffinePattern.burst_length``): the transfer needs
+        ``ceil(nbytes / burst_bytes)`` generated addresses.  Each costs
+        ``issue_overhead`` (default: this link's hardware ``burst_overhead``;
+        pass :data:`SW_ISSUE_OVERHEAD` to price software address generation),
+        amortized over ``pipeline_depth`` in-flight bursts (the descriptor's
+        ``d_buf`` stream-buffer depth — deeper buffers hide more issue
+        latency, the paper's Fig. 4 sweep).  ``burst_bytes=None`` keeps the
+        plain one-burst model.
+        """
         beats = -(-max(0, int(nbytes)) // self.width)       # ceil division
-        return self.latency + (beats * self.width) / self.bandwidth
+        t = self.latency + (beats * self.width) / self.bandwidth
+        if burst_bytes and nbytes > 0:
+            n_bursts = -(-int(nbytes) // int(burst_bytes))
+            ov = (self.burst_overhead if issue_overhead is None
+                  else float(issue_overhead))
+            t += n_bursts * ov / max(1, int(pipeline_depth))
+        return t
+
+    def utilization(self, nbytes: int, burst_bytes: Optional[int] = None, *,
+                    issue_overhead: Optional[float] = None,
+                    pipeline_depth: int = 1) -> float:
+        """Achieved / peak bandwidth for one transfer under this cost model
+        (the paper's Fig. 4 metric for a single link)."""
+        if nbytes <= 0:
+            return 0.0
+        t = self.transfer_time(nbytes, burst_bytes,
+                               issue_overhead=issue_overhead,
+                               pipeline_depth=pipeline_depth)
+        return (nbytes / self.bandwidth) / t
 
     def summary(self) -> str:
         return (f"{self.name}: {self.src}->{self.dst} "

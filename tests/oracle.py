@@ -1,9 +1,11 @@
 """Pure-numpy oracle for ``xdma.transfer`` — the differential-test ground truth.
 
 Everything here is deliberately *independent* of the JAX implementation: the
-layout algebra is re-derived with numpy reshapes, every registered plugin has
-a numpy re-implementation, and remote movements are modelled on a size-1 mesh
-axis (where the link collective is the identity, so the oracle is the plugin
+layout algebra is re-derived as a pure-numpy *pattern walk* (a flat gather
+driven by ``AffinePattern.addresses()`` — see :func:`to_logical` /
+:func:`relayout_oracle`), every registered plugin has a numpy
+re-implementation, and remote movements are modelled on a size-1 mesh axis
+(where the link collective is the identity, so the oracle is the plugin
 composition around an identity link).  ``tests/test_differential.py`` asserts
 ``xdma.transfer == oracle`` over randomly generated descriptors.
 
@@ -34,23 +36,50 @@ class OCTensor:
     mask: np.ndarray
 
 
-# -- layout algebra, re-derived with numpy -----------------------------------
+# -- layout algebra, re-derived as a pattern walk -----------------------------
+# The oracle walks ``AffinePattern.addresses()`` with a flat numpy gather —
+# the address stream IS the layout semantics (one code path for tiled,
+# permuted, padded, and rank-3+ layouts), and it never touches the JAX
+# reshape/transpose implementation it is testing.
+def _plain(layout: L.Layout) -> bool:
+    return (layout.tile is None and not layout.is_permuted
+            and not layout.is_padded)
+
+
 def to_logical(x: np.ndarray, layout: L.Layout) -> np.ndarray:
-    if layout.tile is None:
+    if _plain(layout):
         return x
-    *lead, gm, gn, tm, tn = x.shape
-    perm = tuple(range(len(lead))) + tuple(len(lead) + p for p in (0, 2, 1, 3))
-    return x.transpose(perm).reshape(*lead, gm * tm, gn * tn)
+    logical = layout.logical_shape(x.shape)
+    pat = L.affine_pattern(layout, logical)
+    return np.ascontiguousarray(x).reshape(-1)[pat.addresses()].reshape(logical)
 
 
 def from_logical(x: np.ndarray, layout: L.Layout) -> np.ndarray:
-    if layout.tile is None:
+    if _plain(layout):
         return x
-    *lead, m, n = x.shape
-    tm, tn = layout.tile
-    y = x.reshape(*lead, m // tm, tm, n // tn, tn)
-    perm = tuple(range(len(lead))) + tuple(len(lead) + p for p in (0, 2, 1, 3))
-    return y.transpose(perm)
+    layout.check(x.shape)
+    pat = L.affine_pattern(layout, x.shape)
+    phys = layout.physical_shape(x.shape)
+    out = np.zeros((int(np.prod(phys)),), dtype=x.dtype)
+    out[pat.addresses()] = np.ascontiguousarray(x).reshape(-1)
+    return out.reshape(phys)
+
+
+def relayout_oracle(x: np.ndarray, src_layout: L.Layout, dst_layout: L.Layout,
+                    *, transpose: bool = False) -> np.ndarray:
+    """Ground truth for a pure relayout: the composed ``src⁻¹∘dst`` pattern
+    walked as one flat gather/scatter (stride padding reads back as zeros)."""
+    logical = src_layout.logical_shape(x.shape)
+    pair = L.relayout_pair(src_layout, dst_layout, logical,
+                           transpose=transpose)
+    if pair is None:
+        raise ValueError("no common loop-nest refinement for this pair")
+    out_logical = (tuple(logical[:-2]) + (logical[-1], logical[-2])
+                   if transpose else tuple(logical))
+    phys = dst_layout.physical_shape(out_logical)
+    flat = pair.gather(np.ascontiguousarray(x).reshape(-1),
+                       int(np.prod(phys)))
+    return flat.reshape(phys)
 
 
 # -- plugin semantics, re-implemented with numpy ------------------------------

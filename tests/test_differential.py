@@ -35,7 +35,11 @@ from repro.sharding import shard_map_compat, P as Pspec
 # -- the generation space ----------------------------------------------------
 MS = (128, 256, 384)
 NS = (128, 256)
-LAYOUTS = ("MN", "MNM8N128", "MNM16N128", "MNM32N128")
+# NM / NMM8N128 are the permuted (column-major) canonical layouts of the AGU
+# IR; padded / rank-3+ layouts get their own generalized-case harness below
+# (their address streams are subsets, not permutations, of the physical
+# range, so they need the pattern-walk oracle rather than the chain oracle).
+LAYOUTS = ("MN", "MNM8N128", "MNM16N128", "MNM32N128", "NM", "NMM8N128")
 D_BUFS = (1, 3, 5, 9)
 KINDS = ("local", "peer", "all_to_all", "reduce")
 # chain segments: atomic units that keep the payload a plain array at the
@@ -86,10 +90,11 @@ def _build_chain(segment_ids, terminal, m, n, idx_seed):
 
 def _layout_fits(name, shape):
     layout = C.by_name(name)
-    if layout.tile is None:
-        return True
-    tm, tn = layout.tile
-    return shape[0] % tm == 0 and shape[1] % tn == 0
+    try:
+        layout.check(shape)
+    except ValueError:
+        return False
+    return True
 
 
 def _segment_menu(kind):
@@ -376,6 +381,108 @@ def test_prop_src_patterns_cover_every_address_once(case, channels):
     addrs = np.concatenate([p.addresses() for p in pats])
     assert np.array_equal(np.sort(addrs), np.arange(int(np.prod(logical)))), \
         repr(case)
+
+
+# -- generalized layouts: rank 2-4, random tile / permutation / padding -------
+# These exercise the full AGU IR (arbitrary-rank tilings, perm, padded
+# strides) on pure-relayout descriptors, against the pattern-walk oracle.
+GEN_LAYOUTS = {
+    "mn": C.Layout(None, "MN"),
+    "t8": C.Layout((8, 128), "t8"),
+    "t16": C.Layout((16, 128), "t16"),
+    "colmajor": C.Layout(None, "nm", perm=(1, 0)),
+    "grid_cm": C.Layout((8, 128), "gcm", perm=(1, 0, 2, 3)),
+    "padded": C.Layout(None, "mnp", pad=(0, 64)),
+    "padded_tiled": C.Layout((16, 128), "tp", pad=(0, 128)),
+    "tile3d": C.Layout((2, 8, 128), "t3d"),       # rank-3 tiling
+}
+GEN_LEADS = ((), (2,), (4,), (2, 3))              # logical rank 2..4
+
+
+@dataclasses.dataclass
+class GenCase:
+    """One generalized-layout differential case (pure relayout)."""
+
+    lead: tuple
+    m: int
+    n: int
+    src: str
+    dst: str
+    d_buf: int
+    seed: int
+
+    def __repr__(self):
+        return (f"GenCase({self.lead}+{self.m}x{self.n}, {self.src}->"
+                f"{self.dst}, d_buf={self.d_buf}, seed={self.seed})")
+
+    @property
+    def shape(self):
+        return tuple(self.lead) + (self.m, self.n)
+
+    def build(self):
+        src, dst = GEN_LAYOUTS[self.src], GEN_LAYOUTS[self.dst]
+        rng = np.random.default_rng(self.seed)
+        logical = rng.standard_normal(self.shape).astype(np.float32)
+        x = jnp.asarray(O.from_logical(logical, src))
+        desc = C.XDMADescriptor(src=C.Endpoint.local(src),
+                                dst=C.Endpoint.local(dst), d_buf=self.d_buf)
+        return logical, x, desc
+
+
+def _gen_fits(tag, shape):
+    try:
+        GEN_LAYOUTS[tag].check(shape)
+    except ValueError:
+        return False
+    return True
+
+
+def make_gen_case(rng) -> GenCase:
+    lead = GEN_LEADS[rng.integers(len(GEN_LEADS))]
+    m, n = MS[rng.integers(len(MS))], NS[rng.integers(len(NS))]
+    shape = tuple(lead) + (m, n)
+    tags = [t for t in GEN_LAYOUTS if _gen_fits(t, shape)]
+    src = tags[rng.integers(len(tags))]
+    dst = tags[rng.integers(len(tags))]
+    return GenCase(lead=lead, m=m, n=n, src=src, dst=dst,
+                   d_buf=D_BUFS[rng.integers(len(D_BUFS))],
+                   seed=int(rng.integers(0, 2 ** 16)))
+
+
+def check_gen_case(case: GenCase):
+    logical, x, desc = case.build()
+    got = xdma.transfer(x, desc)
+    want = O.from_logical(logical, GEN_LAYOUTS[case.dst])
+    assert got.shape == want.shape and got.dtype == want.dtype, repr(case)
+    assert np.array_equal(np.asarray(got), want), repr(case)
+    if not case.lead:       # rank 2: the generic AGU Pallas kernel must agree
+        pallas = dataclasses.replace(desc, backend="pallas")
+        assert np.array_equal(np.asarray(xdma.transfer(x, pallas)), want), \
+            repr(case)
+
+
+def test_seeded_generalized_layout_sweep():
+    rng = np.random.default_rng(zlib.crc32(b"generalized"))
+    for _ in range(16):
+        check_gen_case(make_gen_case(rng))
+
+
+@st.composite
+def gen_cases(draw):
+    lead = draw(st.sampled_from(list(GEN_LEADS)))
+    m, n = draw(st.sampled_from(list(MS))), draw(st.sampled_from(list(NS)))
+    shape = tuple(lead) + (m, n)
+    tags = [t for t in GEN_LAYOUTS if _gen_fits(t, shape)]
+    src, dst = draw(st.sampled_from(tags)), draw(st.sampled_from(tags))
+    return GenCase(lead=lead, m=m, n=n, src=src, dst=dst,
+                   d_buf=draw(st.sampled_from(list(D_BUFS))),
+                   seed=draw(st.integers(0, 2 ** 16 - 1)))
+
+
+@given(gen_cases())
+@settings(deadline=None)
+def test_prop_generalized_layouts_match_pattern_oracle(case):
+    check_gen_case(case)
 
 
 @given(st.lists(desc_cases(kinds=("local",)), min_size=1, max_size=3),
