@@ -10,18 +10,21 @@ simulator's contention stall in us, filled by the sections that compute it).
 
 Sections live in one registry: adding a benchmark module here is the single
 step that wires it into ``--only``, ``--list``, and the default full run.
-``--sim`` asks sections that support it (``fig4``, ``fusion``, ``sched``) to
-use the deterministic simulator only, executing nothing — the CI smoke mode.
+``--sim`` asks sections that support it (``fig4``, ``fusion``, ``sched``,
+``apps``) to use the deterministic simulator only — the CI smoke mode
+(``apps`` always is replay-only; its capture just runs the smoke apps once).
 In a full ``--sim`` sweep, sections with no simulator mode are *skipped* (a
 smoke run must stay cheap); ``--only SECTION --sim`` still runs that section
 for real if it has no sim mode.
 
-``--json [PATH]`` writes the PR-4 perf snapshot (default ``BENCH_PR4.json``):
+``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR5.json``):
 measured relayout GB/s through the fused and generic-AGU Pallas backends,
 the simulated Fig. 4 per-link utilization sweep with the software-AGU vs
-Frontend ratio per traffic pattern, and the scheduler rows with their
-contention stalls.  CI uploads it as an artifact, so the repo accumulates a
-bench trajectory.
+Frontend ratio per traffic pattern, the scheduler rows with their contention
+stalls, and the ``apps`` section — captured serving/MoE/train application
+traces replayed on multiple fabrics under Frontend vs software-AGU costing
+(the paper's Fig. 11 end-to-end speedups, from ``benchmarks/apps.py``).
+CI uploads it as an artifact, so the repo accumulates a bench trajectory.
 """
 import argparse
 import importlib
@@ -35,6 +38,7 @@ SECTIONS = {
     "cfgcache": ("cfg_cache", "CFG-cache retrace overhead"),
     "fusion": ("plugin_fusion", "compiled plugin datapath vs fused-XLA vs staged"),
     "sched": ("sched", "distributed scheduler vs in-order queue (multi-link)"),
+    "apps": ("apps", "captured application traces replayed per fabric (Fig. 11)"),
     "roofline": ("roofline", "dry-run roofline fractions"),
 }
 
@@ -49,6 +53,13 @@ def run_section(name: str, *, sim: bool = False, skip_unsimulated: bool = False)
     module, has_sim = _supports_sim(name)
     if sim and skip_unsimulated and not has_sim:
         print(f"# {name}: no simulator mode, skipped in --sim sweep")
+        return
+    if name == "apps" and skip_unsimulated:
+        # the app captures are the priciest setup in the suite (three model
+        # inits + jit traces); full sweeps skip them — CI runs the section
+        # once via its dedicated step, and --json embeds the same rows
+        print("# apps: skipped in full sweep (run --only apps, "
+              "benchmarks.apps, or --json)")
         return
     module.run(**({"sim": sim} if has_sim else {}))
 
@@ -83,25 +94,62 @@ def relayout_gbps():
     return rows
 
 
+def _cached_apps_rows(csv_path: str):
+    """Parse the apps smoke step's CSV (rows are CSV-rounded: 0.1us / 4dp).
+    Only used when the operator explicitly opts in via ``BENCH_APPS_ROWS`` —
+    a silently-found stale file must never masquerade as a fresh capture."""
+    import os
+
+    if not csv_path or not os.path.exists(csv_path):
+        return None
+    rows = []
+    with open(csv_path) as f:
+        for line in f:
+            parts = line.strip().split(",")
+            if not parts or not parts[0].startswith("apps/"):
+                continue
+            row = [parts[0], float(parts[1]), float(parts[2])]
+            if len(parts) > 3 and parts[3]:
+                row.append(float(parts[3]))
+            rows.append(tuple(row))
+    return rows or None
+
+
 def write_snapshot(path: str) -> None:
-    """The BENCH_PR4 perf snapshot: relayout GB/s + simulated utilization."""
-    from . import link_utilization, sched
+    """The BENCH_PR5 perf snapshot: relayout GB/s, simulated utilization,
+    and the captured-application replay table."""
+    from . import apps, link_utilization, sched
+
+    import os
 
     fig4 = link_utilization.run(csv=False, sim=True)
     sched_rows = sched.run(csv=False, sim=True)
+    # CI sets BENCH_APPS_ROWS to the smoke step's CSV so the expensive app
+    # captures run once per job; anyone else gets a fresh capture.  The
+    # snapshot records which path produced the rows.
+    apps_source = os.environ.get("BENCH_APPS_ROWS", "")
+    app_rows = _cached_apps_rows(apps_source)
+    if app_rows is not None:
+        print(f"# apps: rows reused from {apps_source} (BENCH_APPS_ROWS)")
+    else:
+        apps_source = "captured"
+        app_rows = apps.run(csv=False, sim=True)
     gbps = relayout_gbps()
     payload = {
-        "bench": "PR4",
+        "bench": "PR5",
         "columns": {
             "relayout_gbps": ["name", "us_per_call", "gbytes_per_s"],
             "fig4sim": ["name", "simulated_us", "utilization_or_ratio"],
             "sched": ["name", "makespan_us", "utilization_or_speedup",
                       "contention_stalls_us"],
+            "apps": ["name", "makespan_us", "utilization_or_speedup",
+                     "contention_stalls_us"],
         },
         "sections": {
             "relayout_gbps": [list(r) for r in gbps],
             "fig4sim": [list(r) for r in fig4],
             "sched": [list(r) for r in sched_rows],
+            "apps": [list(r) for r in app_rows],
         },
         # the paper's headline comparison axis (Fig. 4): simulated link
         # utilization of Frontend (d_buf=9) over software address generation
@@ -112,11 +160,18 @@ def write_snapshot(path: str) -> None:
         "contention_stalls_us": {
             r[0]: r[3] for r in sched_rows if len(r) > 3
         },
+        # Fig. 11: end-to-end application speedup, XDMA Frontend over
+        # software address generation, per captured app x replay fabric
+        "app_speedup_frontend_vs_sw": {
+            r[0]: r[2] for r in app_rows if r[0].endswith("/speedup")
+        },
+        "apps_rows_source": apps_source,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# wrote {path}: {len(payload['sections'])} sections, "
-          f"{len(payload['sw_vs_frontend_ratio_d9'])} fig4 ratios")
+          f"{len(payload['sw_vs_frontend_ratio_d9'])} fig4 ratios, "
+          f"{len(payload['app_speedup_frontend_vs_sw'])} app speedups")
 
 
 def main() -> None:
@@ -128,7 +183,7 @@ def main() -> None:
                     help="list registered sections and exit")
     ap.add_argument("--sim", action="store_true",
                     help="simulator-only mode for sections that support it")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR4.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_PR5.json", default=None,
                     metavar="PATH", help="write the perf snapshot and exit")
     args = ap.parse_args()
     if args.list:

@@ -1,11 +1,14 @@
-"""Quickstart: the XDMA core in nine moves.
+"""Quickstart: the XDMA core in ten moves.
 
   PYTHONPATH=src python examples/quickstart.py
 
 Moves 1-7 cover the descriptor/transfer core (DESIGN.md §2-§3); move 8 is
 the distributed runtime — async per-link scheduling with futures and the
 deterministic utilization simulator (DESIGN.md §6); move 9 is the plugin
-compiler — a compressed store fused into a single Pallas kernel (§7).
+compiler — a compressed store fused into a single Pallas kernel (§7);
+move 10 is the movement plane (§9) — capture a serving decode step's whole
+movement timeline and replay it on any fabric under hardware-Frontend vs
+software-AGU costing.
 """
 import jax
 import jax.numpy as jnp
@@ -91,3 +94,30 @@ roundtrip = C.XDMAQueue([fused_store,
                         name="compressed_roundtrip")
 print("compressed roundtrip exact:",
       bool(jnp.array_equal(roundtrip.run(sparse), sparse)))
+
+# 10. the movement plane (DESIGN.md §9): capture a decode step, replay it
+#     anywhere.  Every task issued through the chokepoints — transfer(),
+#     queues, scheduler submits — lands in one ledger; replay() prices the
+#     whole application timeline on any fabric, under the hardware Frontend
+#     (pattern bursts amortized over d_buf) or the software-AGU baseline
+#     (one 1D DMA issue per contiguous run).
+import dataclasses
+from repro import configs
+from repro.models import lm
+from repro.runtime import Topology, capture
+from repro.serving.engine import ServingEngine
+
+cfg = dataclasses.replace(configs.smoke_config("phi4_mini_3p8b"),
+                          dtype=jnp.float32, n_kv_heads=2, head_dim=128)
+eng = ServingEngine(cfg, lm.init_params(jax.random.PRNGKey(0), cfg),
+                    max_len=32, cache_dtype=jnp.float32)
+prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                       cfg.vocab)}
+with capture(name="decode") as trace:
+    eng.generate(prompt, 2)                      # prompt staging + KV traffic
+print(trace.summary())
+fabric = Topology.host_device(2)
+hw, sw_cost = trace.replay(fabric), trace.replay(fabric, sw_agu=True)
+print(f"decode timeline on {fabric.name}: frontend {hw.makespan * 1e6:.1f}us "
+      f"vs sw-AGU {sw_cost.makespan * 1e6:.1f}us "
+      f"-> {sw_cost.makespan / hw.makespan:.1f}x app speedup (paper Fig. 11)")

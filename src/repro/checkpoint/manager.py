@@ -12,9 +12,21 @@
 
 Format: one ``.npz`` per checkpoint + a JSON treedef manifest; no external
 deps.  bf16 leaves are bit-cast to uint16 for numpy round-tripping.
+
+Movement plane (DESIGN.md §9): :meth:`CheckpointManager.save` and
+:meth:`~CheckpointManager.restore` stage every matrix-shaped shard through an
+``xdma.transfer`` descriptor (the device<->host staging DMA), so a
+``capture()`` trace records the checkpoint's full movement timeline.  The
+staging descriptor is Cast-capable (``stage_dtype=`` saves a down-cast copy
+and restores through the inverse Cast) and Compress-capable
+(``wire_compress_blocks=`` wraps the wire in the block-sparse
+Compress/Decompress pair — lossless, but the ledger prices the compressed
+wire bytes).  Defaults keep the staging a pure copy: bit-identical to the
+pre-plane behaviour.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import shutil
@@ -24,6 +36,10 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import api as xdma
+from repro.core import plugins as XP
+from repro.core.descriptor import describe
 
 
 def _flatten_with_paths(tree):
@@ -76,18 +92,56 @@ def restore_pytree(template, directory: str, sharding_tree=None):
     return tree
 
 
+# -- host<->device staging descriptors (the checkpoint's XDMA tasks) ---------
+@functools.lru_cache(maxsize=None)
+def _stage_desc(cast_to: Optional[str], compress_blocks: Optional[int]):
+    """One shard's staging DMA: plain copy by default, Cast on the stream
+    when the snapshot dtype differs, Compress/Decompress around the wire when
+    block compression is on (dense in memory at both ends — the pair is
+    lossless; only the ledger's wire pricing changes)."""
+    pre = []
+    post = []
+    if compress_blocks:
+        pre.append(XP.Compress(block_rows=compress_blocks))
+        post.append(XP.Decompress())
+    if cast_to is not None:
+        pre.insert(0, XP.Cast(jnp.dtype(cast_to)))
+    return describe("MN", "MN", pre=tuple(pre), post=tuple(post))
+
+
 class CheckpointManager:
-    def __init__(self, root: str, keep: int = 3):
+    def __init__(self, root: str, keep: int = 3, *,
+                 stage_dtype=None, wire_compress_blocks: Optional[int] = None):
         self.root = root
         self.keep = keep
+        self.stage_dtype = stage_dtype
+        self.wire_compress_blocks = wire_compress_blocks
         os.makedirs(root, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
+    def _stage(self, x, cast_to=None):
+        """Move one shard through the plane (device->host or host->device).
+        Only matrix-shaped leaves are XDMA tasks; scalars/vectors (step
+        counters, biases) ride along as control state."""
+        a = jnp.asarray(x)
+        if a.ndim < 2:
+            return a
+        blocks = self.wire_compress_blocks
+        if blocks and a.shape[-2] % blocks:
+            blocks = None                      # unaligned shard: plain wire
+        if cast_to is not None and (jnp.dtype(cast_to) == a.dtype
+                                    or not jnp.issubdtype(a.dtype, jnp.floating)):
+            cast_to = None
+        return xdma.transfer(a, _stage_desc(
+            None if cast_to is None else jnp.dtype(cast_to).name, blocks))
+
     # -- write --------------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
         self.wait()
-        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        cast = self.stage_dtype
+        snapshot = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(self._stage(x, cast))), tree)
         if blocking:
             self._write(step, snapshot)
         else:
@@ -130,10 +184,35 @@ class CheckpointManager:
         return s[-1] if s else None
 
     def restore(self, step: int, template, sharding_tree=None):
+        """Read the checkpoint and stage every shard host->device through the
+        plane (casting back to the template dtype when the snapshot was saved
+        down-cast).  An elastic restore (``sharding_tree`` given) keeps the
+        pre-plane path — numpy leaves are device_put straight onto their
+        target shardings, never materialized whole on one device — so
+        model-parallel restores cannot OOM a single device; only the cast
+        back to the template dtype is applied on the way."""
         self.wait()
-        return restore_pytree(template,
-                              os.path.join(self.root, f"step_{step:010d}"),
-                              sharding_tree)
+        tree = restore_pytree(template,
+                              os.path.join(self.root, f"step_{step:010d}"))
+        if sharding_tree is not None:
+            # cast on the actual snapshot-vs-template mismatch (the manager
+            # that saved the checkpoint may have used a stage_dtype this one
+            # does not know about), exactly like _stage does
+            def cast(a, t):
+                td = getattr(t, "dtype", None)
+                if (getattr(a, "ndim", 0) >= 2 and td is not None
+                        and jnp.issubdtype(a.dtype, jnp.floating)
+                        and jnp.issubdtype(td, jnp.floating)
+                        and jnp.dtype(a.dtype) != jnp.dtype(td)):
+                    return np.asarray(a).astype(td)
+                return a
+
+            tree = jax.tree.map(cast, tree, template)
+            return jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
+                                sharding_tree)
+        return jax.tree.map(
+            lambda a, t: self._stage(a, getattr(t, "dtype", None)),
+            tree, template)
 
     def _gc(self) -> None:
         steps = self.steps()

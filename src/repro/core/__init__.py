@@ -11,10 +11,13 @@ from .plugins import (  # noqa: F401
     GatherScatter, Compress, Decompress, CTensor, ReduceStage,
     register_plugin, plugin_by_name, registered_plugins,
 )
-from .descriptor import Endpoint, XDMADescriptor, describe  # noqa: F401
+from .descriptor import (  # noqa: F401
+    Endpoint, XDMADescriptor, describe, reduce_descriptor,
+)
 from .engine import xdma_copy, xdma_copy_jit, xdma_copy_pallas, reader, writer  # noqa: F401
 from .remote import (  # noqa: F401
-    xdma_ppermute, xdma_all_to_all, compressed_psum, compressed_psum_with_feedback,
+    xdma_ppermute, xdma_all_to_all, xdma_psum, compressed_psum,
+    compressed_psum_with_feedback,
 )
 from .api import (  # noqa: F401
     XDMAQueue, transfer, cache_stats, clear_cache,

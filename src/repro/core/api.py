@@ -47,6 +47,14 @@ __all__ = ["transfer", "XDMAQueue", "cache_stats", "clear_cache",
            "cache_capacity", "set_cache_capacity"]
 
 
+# -- the movement-plane capture slot (DESIGN.md §9) ---------------------------
+# The ambient TransferTrace installed by repro.runtime.trace.capture(), or
+# None.  It lives here (not in runtime/) so every chokepoint — transfer(),
+# XDMAQueue, DistributedScheduler.submit — shares one slot without an import
+# cycle; when no capture is open the cost is a single `is None` check.
+_CAPTURE = None
+
+
 # -- the CFG cache: descriptor -> lowered callable ---------------------------
 @dataclasses.dataclass
 class _CacheStats:
@@ -195,7 +203,7 @@ def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
                 y = remote.compressed_psum(y, ep.axis, ep.axis_size,
                                            out_dtype=out_dtype)
             else:
-                y = lax.psum(y, ep.axis)
+                y = remote.xdma_psum(y, ep.axis)
             y = P.apply_chain(post_rest, y)
         else:  # pragma: no cover - movement is validated by the descriptor
             raise ValueError(f"unknown movement {movement!r}")
@@ -238,8 +246,14 @@ def transfer(x: jnp.ndarray, desc: XDMADescriptor, *,
     called inside ``shard_map`` (or jit with sharded inputs), exactly like
     the backend functions they lower to.  ``interpret`` only affects the
     Pallas backend (kernels run in interpret mode off-TPU).
+
+    When a :func:`repro.runtime.trace.capture` scope is open, every call is
+    recorded into the ambient :class:`~repro.runtime.trace.TransferTrace`.
     """
-    return _lowered(desc, interpret)(x)
+    out = _lowered(desc, interpret)(x)
+    if _CAPTURE is not None:
+        _CAPTURE.record_transfer(x, desc, out)
+    return out
 
 
 # -- the Controller's in-order task queue (paper §II-B) ----------------------
@@ -311,7 +325,11 @@ class XDMAQueue:
 
     def run_task(self, x, i: int, *, interpret: bool = True):
         """Dispatch task ``i`` alone (in-order use is the caller's contract)."""
-        return self._task(i, interpret)(x)
+        out = self._task(i, interpret)(x)
+        if _CAPTURE is not None:
+            _CAPTURE.record_transfer(x, self._descs[i], out, source="queue",
+                                     label=f"{self.name}[{i}]")
+        return out
 
     def run(self, x, *, interpret: bool = True):
         """Dispatch the whole queue in order as one fused program."""
@@ -331,7 +349,10 @@ class XDMAQueue:
 
             fused = jax.jit(chain) if self.is_local else chain
             self._fused[interpret] = fused
-        return fused(x)
+        out = fused(x)
+        if _CAPTURE is not None:
+            _CAPTURE.record_queue(self, x, out)
+        return out
 
     def summary(self) -> str:
         lines = [f"XDMAQueue({self.name!r}, {len(self)} tasks)"]

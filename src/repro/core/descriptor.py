@@ -18,12 +18,13 @@ as a back-compat shim and lands on the pre host.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Optional, Sequence, Tuple
 
 from . import layouts as L
 from . import plugins as P
 
-__all__ = ["Endpoint", "XDMADescriptor", "describe"]
+__all__ = ["Endpoint", "XDMADescriptor", "describe", "reduce_descriptor"]
 
 _LOCAL = "local"
 _PEER = "peer"
@@ -311,3 +312,18 @@ def describe(src: str | L.Layout | Endpoint, dst: str | L.Layout | Endpoint,
     return XDMADescriptor(src=s, dst=d, pre=tuple(plugins) or tuple(pre),
                           post=tuple(post), d_buf=d_buf, channels=channels,
                           backend=backend)
+
+
+@functools.lru_cache(maxsize=None)
+def reduce_descriptor(axis, axis_size: int, *,
+                      compressed: bool = False) -> XDMADescriptor:
+    """The canonical all-reduce task over ``axis`` (a mesh-axis name, or a
+    tuple of names for a multi-axis reduction): a ``reduce`` endpoint that
+    lowers to exactly ``lax.psum`` — or, when ``compressed``, the int8 wire
+    codec (Quantize pre-writer / Dequantize post-reader) lowering to
+    ``compressed_psum``.  The single factory every plane call site shares
+    (MoE psum/pmean, the DP gradient sync)."""
+    pre = (P.Quantize(),) if compressed else ()
+    post = (P.Dequantize(),) if compressed else ()
+    return XDMADescriptor(dst=Endpoint.reduce(axis, axis_size),
+                          pre=pre, post=post)

@@ -37,9 +37,18 @@ from . import plugins as P
 __all__ = [
     "xdma_ppermute",
     "xdma_all_to_all",
+    "xdma_psum",
     "compressed_psum",
     "compressed_psum_with_feedback",
 ]
+
+
+def xdma_psum(x: jnp.ndarray, axis_name) -> jnp.ndarray:
+    """Uncompressed all-reduce rendezvous (the plain lowering of a ``reduce``
+    endpoint).  Lives here so *every* collective primitive the movement
+    plane emits originates in this module — the property the in-plane tests
+    assert."""
+    return lax.psum(x, axis_name)
 
 
 def xdma_ppermute(x: jnp.ndarray, axis_name: str,

@@ -84,7 +84,9 @@ def make_staging_queue(dtype_name: str):
 def stage_batch(batch: Dict[str, np.ndarray], dtype) -> Dict:
     """Stage one host batch for the accelerator: float payloads (embeds,
     audio frames, ...) run through the staging queue (cast fused into the
-    copy); integer id tensors pass through untouched."""
+    copy); integer id tensors pass through untouched.  The queue is a
+    movement-plane chokepoint, so an ambient ``capture()`` records one
+    staging event per float tensor."""
     import jax.numpy as jnp
     queue = make_staging_queue(jnp.dtype(dtype).name)
     out = {}
@@ -107,6 +109,11 @@ def prefetch_staged(batches: Iterator[Dict], dtype, *, depth: int = 2,
     fully staged dicts, bit-identical to :func:`stage_batch` (the futures
     resolve through the same cached Cast lowering); ``scheduler.report()``
     afterwards shows the overlapped timeline.
+
+    The pipeline's scheduler — including the private default built here —
+    submits through the movement plane's chokepoint, so an ambient
+    :func:`repro.runtime.trace.capture` scope records every staging task
+    (descriptor, h2d link, payload bytes) without being handed the scheduler.
     """
     from collections import deque
 

@@ -24,8 +24,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import plugins as XP
+from repro.core import api as xdma
 from repro.core.api import XDMAQueue
-from repro.core.descriptor import Endpoint, XDMADescriptor
+from repro.core.descriptor import Endpoint, XDMADescriptor, reduce_descriptor
 from repro.sharding import constrain, P, shard_map_compat
 
 
@@ -95,6 +96,46 @@ def _combine(cfg, out_buf, slot, keep, order, gates, T, d):
     w = gates.reshape(-1)[order].astype(vals.dtype)[:, None]
     y = jnp.zeros((T, d), out_buf.dtype).at[order // cfg.top_k].add(vals * w * keep[:, None])
     return y
+
+
+# -- every remaining collective as a movement-plane task ---------------------
+# Since the movement-plane refactor (DESIGN.md §9) the MoE sublayer issues NO
+# raw collectives: the a2a exchange was already descriptor-driven, and the
+# residual lax.psum / lax.all_gather / lax.pmean now lower through `reduce`
+# and `peer` endpoint descriptors, so a capture() trace sees every byte the
+# layer moves.
+def _pmean(x, axes, n_total: int):
+    """lax.pmean through the plane: reduce-endpoint psum, then the local
+    divide (same decomposition pmean itself uses, so bit-identical)."""
+    return xdma.transfer(x, reduce_descriptor(axes, n_total)) / n_total
+
+
+@functools.lru_cache(maxsize=None)
+def _hop_desc(axis: str, n: int) -> XDMADescriptor:
+    perm = tuple((i, (i + 1) % n) for i in range(n))
+    return XDMADescriptor(dst=Endpoint.peer(axis, perm))
+
+
+def _ring_all_gather(x, axis_name: str, n: int):
+    """``lax.all_gather(x, axis, axis=1, tiled=True)`` decomposed into n-1
+    XDMA peer-tunnel hops (paper §II: every link is a point-to-point
+    half-XDMA pair).  Pure data movement — bit-identical to the collective —
+    and every hop is a ``peer`` descriptor the capture ledger records.
+
+    ``x`` is ``(B, S_local, d)``; returns ``(B, n * S_local, d)`` ordered by
+    source rank, exactly like the tiled all-gather it replaces.
+    """
+    if n == 1:
+        return x
+    parts = [x]
+    for _ in range(n - 1):
+        parts.append(xdma.transfer(parts[-1], _hop_desc(axis_name, n)))
+    stacked = jnp.stack(parts)           # [j] = shard of rank (i - j) % n
+    idx = lax.axis_index(axis_name)
+    order = jnp.mod(idx - jnp.arange(n), n)
+    ordered = jnp.take(stacked, order, axis=0)      # [s] = shard of rank s
+    B, S, d = x.shape
+    return jnp.moveaxis(ordered, 0, 1).reshape(B, n * S, d)
 
 
 def _dispatch_queue(model_axis: str, dtype, wire_plugins) -> XDMAQueue:
@@ -177,14 +218,15 @@ def _moe_tokens(cfg, p, tokens, *, model_axis: Optional[str], n_model: int,
     return y, aux
 
 
-def _expert_ffn_tp(cfg, p, buf, model_axis):
-    """TP experts: d_ff sharded over the model axis, one psum per layer."""
+def _expert_ffn_tp(cfg, p, buf, model_axis, n_model):
+    """TP experts: d_ff sharded over the model axis; the per-layer all-reduce
+    is a ``reduce``-endpoint XDMA task (the plane's spelling of psum)."""
     dt = buf.dtype
     g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
     u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
     h = jax.nn.silu(g) * u
     out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
-    return lax.psum(out, model_axis)
+    return xdma.transfer(out, reduce_descriptor(model_axis, n_model))
 
 
 def ep_enabled(cfg, n_model: int) -> bool:
@@ -215,6 +257,7 @@ def moe_apply(cfg, p, x, *, mesh=None, scheduler=None, overlap_chunks: int = 2):
     n_model = mesh.shape[axes.model]
     bspec = axes.batch_spec
     all_axes = tuple(mesh.axis_names)
+    n_total = int(mesh.size)
     wire = (XP.Quantize(),) if getattr(cfg, "moe_wire_int8", False) else ()
     use_ep = ep_enabled(cfg, n_model) and S % n_model == 0 and S >= n_model
 
@@ -229,8 +272,8 @@ def moe_apply(cfg, p, x, *, mesh=None, scheduler=None, overlap_chunks: int = 2):
                              model_axis=axes.model, n_model=n_model,
                              wire_plugins=wire, scheduler=scheduler,
                              overlap_chunks=overlap_chunks)
-        y = lax.all_gather(y.reshape(Bl, Sl, d), axes.model, axis=1, tiled=True)
-        aux = lax.pmean(aux, all_axes)
+        y = _ring_all_gather(y.reshape(Bl, Sl, d), axes.model, n_model)
+        aux = _pmean(aux, all_axes, n_total)
         return y, aux
 
     def body_ep_nosplit(xl, router_w, w_gate, w_up, w_down):
@@ -243,7 +286,7 @@ def moe_apply(cfg, p, x, *, mesh=None, scheduler=None, overlap_chunks: int = 2):
                              model_axis=axes.model, n_model=n_model,
                              wire_plugins=wire, scheduler=scheduler,
                              overlap_chunks=overlap_chunks)
-        aux = lax.pmean(aux, all_axes)
+        aux = _pmean(aux, all_axes, n_total)
         return y.reshape(xl.shape), aux
 
     tp_ok = cfg.d_ff_expert % n_model == 0
@@ -256,11 +299,11 @@ def moe_apply(cfg, p, x, *, mesh=None, scheduler=None, overlap_chunks: int = 2):
         capacity = int(cfg.capacity_factor * cfg.top_k * T // cfg.n_experts) + 1
         buf, slot, keep, order, _ = _dispatch(cfg, tokens, eidx, gates, capacity)
         if tp_ok:
-            out = _expert_ffn_tp(cfg, pl, buf, axes.model)
+            out = _expert_ffn_tp(cfg, pl, buf, axes.model, n_model)
         else:
             out = _expert_ffn(cfg, pl, buf)    # replicated experts (fallback)
         y = _combine(cfg, out, slot, keep, order, gates, T, d)
-        aux = lax.pmean(aux, all_axes)
+        aux = _pmean(aux, all_axes, n_total)
         return y.reshape(xl.shape), aux
 
     if use_ep:

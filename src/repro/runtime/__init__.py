@@ -10,10 +10,16 @@ Three layers, mirroring the paper's distributed Controller:
   and drains ready tasks on distinct links together in batched rounds;
 * :mod:`~repro.runtime.simulator` — deterministic event-driven replay of any
   schedule against a topology: per-link utilization, contention stalls,
-  makespan (Fig. 4 numbers without host-timing noise).
+  makespan (Fig. 4 numbers without host-timing noise);
+* :mod:`~repro.runtime.trace` — the application movement ledger (DESIGN.md
+  §9): ``capture()`` records every task issued through the plane's
+  chokepoints into a :class:`~repro.runtime.trace.TransferTrace`, and
+  ``replay()`` simulates the whole application timeline on any topology
+  under hardware-Frontend vs software-AGU costing.
 """
 from .topology import Link, Topology  # noqa: F401
 from .simulator import (  # noqa: F401
     SimReport, SimTask, Span, queue_sim_tasks, serialize, simulate,
 )
 from .scheduler import DistributedScheduler, XDMAFuture  # noqa: F401
+from .trace import TraceEvent, TransferTrace, capture, replay  # noqa: F401

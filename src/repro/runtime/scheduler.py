@@ -118,6 +118,8 @@ class _Task:
     done: bool = False
     value: Any = None
     round: int = -1
+    event: Any = None                    # TraceEvent when a capture was open
+    trace: Any = None                    # the TransferTrace owning `event`
 
 
 class DistributedScheduler:
@@ -159,6 +161,13 @@ class DistributedScheduler:
         self._fifos[task.resource].append(task.id)
         return XDMAFuture(self, task.id)
 
+    def _dep_events(self, deps: Tuple[int, ...]) -> Tuple[int, ...]:
+        """Ledger event ids of dependency tasks.  Unknown dep ids are left
+        for _enqueue's validation to reject with its designed error."""
+        return tuple(t.event.id for t in
+                     (self._tasks.get(d) for d in deps)
+                     if t is not None and t.event is not None)
+
     @staticmethod
     def _dep_ids(inputs: Sequence[Any], deps: Sequence) -> Tuple[int, ...]:
         ids: List[int] = []
@@ -184,7 +193,15 @@ class DistributedScheduler:
         task = _Task(id=tid, kind="xdma", resource=self._route(desc, link),
                      deps=self._dep_ids((x,), deps), desc=desc, inputs=(x,),
                      nbytes=nbytes, label=label or desc.summary())
-        return self._enqueue(task)
+        fut = self._enqueue(task)        # validate before the ledger records:
+        cap = _api._CAPTURE              # a rejected submit must not leave a
+        if cap is not None:              # phantom event (DESIGN.md §9)
+            task.event = cap.record_submit(
+                x if not isinstance(x, XDMAFuture) else None, desc,
+                task.resource, deps=self._dep_events(task.deps),
+                label=task.label)
+            task.trace = cap
+        return fut
 
     def submit_compute(self, fn: Callable, *inputs: Any,
                        resource: str = "compute0", deps: Sequence = (),
@@ -199,7 +216,14 @@ class DistributedScheduler:
         task = _Task(id=tid, kind="compute", resource=resource,
                      deps=self._dep_ids(inputs, deps), fn=fn, inputs=inputs,
                      cost_s=float(cost_s), label=label or getattr(fn, "__name__", "compute"))
-        return self._enqueue(task)
+        fut = self._enqueue(task)
+        cap = _api._CAPTURE
+        if cap is not None:
+            task.event = cap.record_compute(resource, task.cost_s,
+                                            deps=self._dep_events(task.deps),
+                                            label=task.label)
+            task.trace = cap
+        return fut
 
     # -- dispatch ------------------------------------------------------------
     def _resolve(self, obj: Any) -> Any:
@@ -268,6 +292,16 @@ class DistributedScheduler:
                             if t.kind == "xdma" else 0)
             if t.burst_bytes is None and t.kind == "xdma":
                 t.burst_bytes = _burst_bytes(t.desc, inputs[i])
+            if t.event is not None and t.kind == "xdma":
+                # finalize the ledger row with the measured payload, and
+                # register this task's output provenance with the trace that
+                # OWNS the event (not whatever capture happens to be ambient
+                # at flush time — a lazily-drained scheduler must not leak
+                # its event ids into an unrelated trace)
+                t.trace.finalize(t.event, nbytes=t.nbytes,
+                                 burst_bytes=t.burst_bytes,
+                                 value=inputs[i])
+                t.trace.register_value(t.event, t.value)
             t.done = True
             t.round = self._rounds
             self._heads[t.resource] += 1

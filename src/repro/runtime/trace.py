@@ -1,0 +1,462 @@
+"""The application movement ledger: capture every XDMA task, replay anywhere.
+
+The paper's headline system claim (§V, Fig. 10/11) is about *applications*:
+serving, training, checkpointing move data through many XDMA tasks, and the
+2.3x average speedup comes from pricing that whole timeline with a hardware
+address-generator Frontend instead of software DMA issue loops.  To reproduce
+it we need a complete record of what an application actually moves — which is
+what this module provides (DESIGN.md §9):
+
+* :class:`TransferTrace` — the ledger.  One :class:`TraceEvent` per issued
+  XDMA task (descriptor, endpoint kind, payload/wire bytes, burst geometry,
+  link, dependency edges) or interleaved compute.
+* :func:`capture` — a context manager installing the ambient trace.  The
+  movement-plane chokepoints — :func:`repro.core.api.transfer` (plus the
+  :class:`~repro.core.api.XDMAQueue` it fronts) and
+  :meth:`repro.runtime.scheduler.DistributedScheduler.submit` — record into
+  it; with no capture open they pay a single ``is None`` check (zero-cost
+  when off).
+* :meth:`TransferTrace.replay` — turn the ledger into
+  :class:`~repro.runtime.simulator.SimTask`\\ s (through the same
+  :func:`~repro.runtime.simulator.queue_sim_tasks` contract path the queue
+  benchmarks use) and simulate the whole application timeline on any
+  :class:`~repro.runtime.topology.Topology`, under either cost model:
+
+  Both models issue one address per contiguous run of the composed affine
+  pattern (``burst_bytes``; one logical row — ``row_bytes`` — when no
+  pattern exists: plugin chains, remote exchanges).  They differ in the
+  per-issue cost and pipelining:
+
+  - **frontend** (default): the link's hardware burst overhead (~50 ns)
+    amortized over ``d_buf`` in-flight bursts (the PR-4 pattern cost model);
+  - **sw-AGU** (``sw_agu=True``):
+    :data:`~repro.runtime.topology.SW_ISSUE_OVERHEAD` (~1 us) per
+    serially-programmed 1D DMA, no pipelining — the paper's software
+    baseline.
+
+Capture semantics under jit/shard_map: recording happens at Python trace
+time, so a jitted application records its movements **once per compilation**,
+with shapes taken from tracer avals.  Wrap the *first* call (or a fresh
+jitted callable) in ``capture()``; re-executions of an already-compiled
+program issue no Python-level tasks and therefore record nothing new.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import api as _api
+from repro.core import plugins as XP
+from repro.core.api import XDMAQueue
+from repro.core.descriptor import XDMADescriptor
+
+from .simulator import SimReport, SimTask, queue_sim_tasks, simulate
+from .topology import SW_ISSUE_OVERHEAD, Topology
+
+__all__ = ["TraceEvent", "TransferTrace", "capture", "current", "replay"]
+
+
+def _tree_nbytes(value: Any) -> Optional[int]:
+    """Payload bytes of an array / QTensor / CTensor / pytree (aval-safe)."""
+    import jax
+
+    total = 0
+    seen = False
+    for leaf in jax.tree_util.tree_leaves(value):
+        size = getattr(leaf, "size", None)
+        dtype = getattr(leaf, "dtype", None)
+        if size is not None and dtype is not None:
+            total += int(size) * int(np.dtype(dtype).itemsize)
+            seen = True
+    return total if seen else None
+
+
+def _primary_leaf(value: Any):
+    if isinstance(value, (XP.QTensor, XP.CTensor)):
+        return value.values
+    return value
+
+
+def _is_tracer(leaf: Any) -> bool:
+    import jax
+
+    return isinstance(leaf, jax.core.Tracer)
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One row of the ledger (mutable: scheduler-submitted events are
+    finalized with measured sizes at dispatch time).
+
+    ``nbytes`` is the task's total payload (src read + dst write, the memory-
+    port traffic the simulator charges for local movements); ``wire_nbytes``
+    is what actually crosses a *remote* link after the pre-host codec
+    (int8 values + scales for Quantize, both collective phases for reduce) —
+    ``None`` means the link moves the plain payload.  ``burst_bytes`` is the
+    contiguous run of the composed affine pattern — the address-issue unit
+    of *both* replay cost models; ``row_bytes`` is one logical row, the
+    fallback issue unit when no pattern exists (plugin chains, remote
+    exchanges).  ``deps`` are ledger event ids (data-flow provenance plus
+    any scheduler dependency tokens)."""
+
+    id: int
+    kind: str                            # "xdma" | "compute"
+    endpoint: str                        # movement kind, or "compute"
+    desc: Optional[XDMADescriptor] = None
+    link: Optional[str] = None           # pinned link / compute engine
+    deps: Tuple[int, ...] = ()
+    logical_shape: Optional[Tuple[int, ...]] = None
+    in_dtype: Any = None
+    nbytes: Optional[int] = None
+    wire_nbytes: Optional[int] = None
+    burst_bytes: Optional[int] = None
+    row_bytes: Optional[int] = None
+    pipeline_depth: int = 1
+    cost_s: float = 0.0
+    label: str = ""
+    source: str = "transfer"             # transfer | queue | scheduler | compute
+
+
+def _wire_nbytes(desc: XDMADescriptor, logical_shape, in_dtype) -> Optional[int]:
+    """Link-crossing bytes, priced by the pre-host chain's shape/dtype
+    contracts: remote movements always cross a link (a reduce crosses twice —
+    reduce-scatter + all-gather), and a local movement with a codec on the
+    pre host (Quantize) moves the compressed stream.  QTensor scales ride
+    along at one f32 per row.  None = the link moves the plain payload.
+    (Compress wires depend on runtime occupancy — see ``record_transfer``'s
+    concrete-payload fallback.)"""
+    codec = any(isinstance(p, XP.Quantize) for p in desc.pre)
+    if ((not desc.is_remote and not codec) or logical_shape is None
+            or in_dtype is None):
+        return None
+    try:
+        shape = XP.chain_out_shape(desc.pre, tuple(logical_shape))
+        dtype = XP.chain_out_dtype(desc.pre, in_dtype)
+        w = math.prod(shape) * int(np.dtype(dtype).itemsize)
+        if codec:
+            w += (math.prod(shape[:-1]) if len(shape) > 1 else 1) * 4
+    except Exception:
+        return None
+    if desc.movement == "reduce":
+        w *= 2
+    return int(w)
+
+
+def _logical_of(desc: XDMADescriptor, shape, dtype):
+    """Logical shape of a physical src buffer; falls back to the plain shape
+    for untileable views, None when there is no usable geometry."""
+    if shape is None or dtype is None or len(shape) < 2:
+        return None
+    shape = tuple(int(s) for s in shape)
+    try:
+        return desc.src.layout.logical_shape(shape)
+    except (ValueError, KeyError):
+        return shape
+
+
+class TransferTrace:
+    """The movement-plane ledger for one :func:`capture` scope."""
+
+    def __init__(self, name: str = "trace"):
+        self.name = name
+        self.events: List[TraceEvent] = []
+        self._prov: Dict[int, int] = {}      # id(array leaf) -> producing event
+        self._keep: List[Any] = []           # pins for non-weakref-able leaves
+
+    # -- recording (called by the chokepoints) -------------------------------
+    def _provenance(self, value: Any) -> Tuple[int, ...]:
+        import jax
+
+        deps: List[int] = []
+        for leaf in jax.tree_util.tree_leaves(value):
+            ev = self._prov.get(id(leaf))
+            if ev is not None and ev not in deps:
+                deps.append(ev)
+        return tuple(deps)
+
+    def _evict(self, key: int, event_id: int) -> None:
+        if self._prov.get(key) == event_id:
+            del self._prov[key]
+
+    def register_value(self, event: TraceEvent, value: Any) -> None:
+        """Mark ``value``'s leaves as produced by ``event`` (data-flow edges
+        for later tasks consuming them).  The registry holds leaves weakly —
+        a collected buffer evicts its own id, so long captures don't pin
+        every intermediate (leaves that refuse weakrefs are pinned instead:
+        id reuse would silently rewire provenance)."""
+        import jax
+        import weakref
+
+        for leaf in jax.tree_util.tree_leaves(value):
+            key = id(leaf)
+            self._prov[key] = event.id
+            try:
+                weakref.finalize(leaf, self._evict, key, event.id)
+            except TypeError:
+                self._keep.append(leaf)
+
+    def _event(self, desc: XDMADescriptor, *, logical, dtype, deps, label,
+               source, link=None) -> TraceEvent:
+        burst = row = None
+        if logical is not None and dtype is not None:
+            try:
+                burst = desc.burst_bytes(logical, dtype)
+            except (ValueError, KeyError):
+                burst = None
+            row = int(logical[-1]) * int(np.dtype(dtype).itemsize)
+        ev = TraceEvent(
+            id=len(self.events), kind="xdma", endpoint=desc.movement,
+            desc=desc, link=link, deps=tuple(deps),
+            logical_shape=logical, in_dtype=dtype,
+            wire_nbytes=_wire_nbytes(desc, logical, dtype),
+            burst_bytes=burst, row_bytes=row, pipeline_depth=desc.d_buf,
+            label=label or desc.summary(), source=source)
+        if logical is not None and dtype is not None:
+            try:
+                out_shape = desc.out_logical_shape(logical)
+                out_dtype = desc.out_dtype(dtype)
+                ev.nbytes = int(
+                    math.prod(logical) * np.dtype(dtype).itemsize
+                    + math.prod(out_shape) * np.dtype(out_dtype).itemsize)
+            except Exception:
+                ev.nbytes = None
+        self.events.append(ev)
+        return ev
+
+    def record_transfer(self, x: Any, desc: XDMADescriptor, out: Any, *,
+                        source: str = "transfer", label: str = "") -> TraceEvent:
+        """One executed ``xdma.transfer``-style task (x -> desc -> out)."""
+        leaf = _primary_leaf(x)
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        ev = self._event(desc, logical=_logical_of(desc, shape, dtype),
+                         dtype=dtype,
+                         deps=self._provenance(x), label=label, source=source)
+        if ev.nbytes is None:
+            nb_in, nb_out = _tree_nbytes(x), _tree_nbytes(out)
+            ev.nbytes = None if nb_in is None else nb_in + (nb_out or 0)
+        if ev.wire_nbytes is None and isinstance(out, XP.CTensor):
+            try:                     # concrete compressed payload: exact wire
+                ev.wire_nbytes = int(out.wire_nbytes())
+            except Exception:
+                pass
+        if ev.wire_nbytes is None and not _is_tracer(leaf):
+            # a Compress somewhere on the pre host (e.g. a Decompress follows
+            # it, so no CTensor leaves the task): occupancy is runtime state,
+            # so evaluate the codec prefix on the concrete payload.  This
+            # repeats compression work the lowered program already did —
+            # accepted: it only runs under capture, and the lowering does not
+            # expose its mid-chain CTensor
+            for i, p in enumerate(desc.pre):
+                if isinstance(p, XP.Compress):
+                    try:
+                        ct = XP.apply_chain(desc.pre[:i + 1], x)
+                        ev.wire_nbytes = int(ct.wire_nbytes())
+                    except Exception:
+                        pass
+                    break
+        self.register_value(ev, out)
+        return ev
+
+    def record_queue(self, queue: XDMAQueue, x: Any, out: Any) -> List[TraceEvent]:
+        """A fused :class:`XDMAQueue` run: one chained event per task, shapes
+        propagated through the queue's compile-time contracts."""
+        leaf = _primary_leaf(x)
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        logical = (_logical_of(queue.descriptors[0], shape, dtype)
+                   if queue.descriptors else None)
+        deps = self._provenance(x)
+        evs: List[TraceEvent] = []
+        for i, desc in enumerate(queue.descriptors):
+            ev = self._event(desc, logical=logical, dtype=dtype, deps=deps,
+                             label=f"{queue.name}[{i}]", source="queue")
+            if logical is not None:
+                try:
+                    logical = desc.out_logical_shape(logical)
+                    dtype = desc.out_dtype(dtype)
+                except Exception:
+                    logical = None
+            deps = (ev.id,)
+            evs.append(ev)
+        if evs:
+            self.register_value(evs[-1], out)
+        return evs
+
+    def record_submit(self, x: Any, desc: XDMADescriptor, link: str, *,
+                      deps: Sequence[int] = (), label: str = "") -> TraceEvent:
+        """A scheduler-submitted task; sizes are finalized at dispatch via
+        :meth:`finalize` (the scheduler measures the real payload then)."""
+        leaf = _primary_leaf(x)
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        all_deps = tuple(dict.fromkeys(tuple(deps) + self._provenance(x)))
+        return self._event(desc, logical=_logical_of(desc, shape, dtype),
+                           dtype=dtype, deps=all_deps,
+                           label=label, source="scheduler", link=link)
+
+    def record_compute(self, resource: str, cost_s: float, *,
+                       deps: Sequence[int] = (), label: str = "") -> TraceEvent:
+        ev = TraceEvent(
+            id=len(self.events), kind="compute", endpoint="compute",
+            link=resource, deps=tuple(deps), cost_s=float(cost_s),
+            label=label, source="compute")
+        self.events.append(ev)
+        return ev
+
+    @staticmethod
+    def finalize(ev: TraceEvent, *, nbytes: Optional[int],
+                 burst_bytes: Optional[int], value: Any = None) -> None:
+        """Fill a submit-time event with dispatch-time facts: the measured
+        payload, the routed burst, and — for future-fed tasks whose src
+        buffer only materialized at dispatch — the geometry."""
+        if nbytes is not None:
+            ev.nbytes = int(nbytes)
+        if ev.burst_bytes is None:
+            ev.burst_bytes = burst_bytes
+        if ev.logical_shape is None and ev.desc is not None and value is not None:
+            leaf = _primary_leaf(value)
+            shape = getattr(leaf, "shape", None)
+            dtype = getattr(leaf, "dtype", None)
+            logical = _logical_of(ev.desc, shape, dtype)
+            ev.logical_shape, ev.in_dtype = logical, dtype
+            if logical is not None:
+                if ev.row_bytes is None:
+                    ev.row_bytes = (int(logical[-1])
+                                    * int(np.dtype(dtype).itemsize))
+                if ev.burst_bytes is None:
+                    try:
+                        ev.burst_bytes = ev.desc.burst_bytes(logical, dtype)
+                    except (ValueError, KeyError):
+                        pass
+                if ev.wire_nbytes is None:
+                    # future-fed codec/remote submits get their wire price
+                    # the moment the src geometry is known
+                    ev.wire_nbytes = _wire_nbytes(ev.desc, logical, dtype)
+
+    # -- queries -------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[TraceEvent]:
+        return iter(self.events)
+
+    def xdma_events(self) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind == "xdma"]
+
+    def by_endpoint(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.xdma_events():
+            out[e.endpoint] = out.get(e.endpoint, 0) + 1
+        return out
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(e.nbytes or 0 for e in self.xdma_events())
+
+    def per_link_bytes(self) -> Dict[str, int]:
+        """Payload bytes per pinned link (scheduler-routed events only) —
+        comparable 1:1 with the per-link sums of the submitting scheduler's
+        ``sim_tasks()`` (the byte-parity contract)."""
+        out: Dict[str, int] = {}
+        for e in self.xdma_events():
+            if e.link is not None:
+                out[e.link] = out.get(e.link, 0) + (e.nbytes or 0)
+        return out
+
+    def summary(self) -> str:
+        kinds = ", ".join(f"{k}={n}" for k, n in sorted(self.by_endpoint().items()))
+        return (f"TransferTrace({self.name!r}, {len(self.events)} events, "
+                f"{self.total_bytes} bytes; {kinds or 'empty'})")
+
+    # -- replay --------------------------------------------------------------
+    def sim_tasks(self, topology: Topology, *, sw_agu: bool = False) -> List[SimTask]:
+        """The ledger as simulator tasks on ``topology``: events pinned to a
+        link that exists there keep it, the rest round-robin over the fabric
+        (the scheduler's default routing); compute events keep their engine.
+        ``sw_agu`` switches the address-generation cost model (see module
+        docstring)."""
+        links = topology.link_names
+        if not links:
+            raise ValueError(f"topology {topology.name!r} has no links")
+        rr = 0
+        tasks: List[SimTask] = []
+        for ev in self.events:
+            if ev.kind == "compute":
+                tasks.append(SimTask(id=ev.id, resource=ev.link or "compute0",
+                                     deps=ev.deps, cost_s=ev.cost_s,
+                                     label=ev.label))
+                continue
+            if ev.link is not None and ev.link in topology:
+                res = ev.link
+            else:
+                res = links[rr % len(links)]
+                rr += 1
+            task = None
+            if (ev.desc is not None and ev.logical_shape is not None
+                    and ev.in_dtype is not None):
+                # the contract path queue replays use: nbytes + burst geometry
+                # derived from the descriptor alone, no execution needed
+                try:
+                    task = queue_sim_tasks(XDMAQueue([ev.desc], name="ev"),
+                                           ev.logical_shape, ev.in_dtype, res,
+                                           start_id=ev.id)[0]
+                    task = dataclasses.replace(task, deps=ev.deps,
+                                               label=ev.label)
+                except (ValueError, KeyError):
+                    task = None
+            if task is None:
+                task = SimTask(id=ev.id, resource=res, nbytes=ev.nbytes or 0,
+                               deps=ev.deps, label=ev.label,
+                               burst_bytes=ev.burst_bytes,
+                               pipeline_depth=ev.pipeline_depth)
+            if ev.wire_nbytes is not None:
+                task = dataclasses.replace(task, nbytes=int(ev.wire_nbytes))
+            # Both cost models issue one address per contiguous run of the
+            # composed pattern; when no pattern exists (plugin chains, remote
+            # exchanges) the issue unit is a logical row.  They differ in the
+            # per-issue cost and in pipelining: the Frontend amortizes its
+            # 50ns over d_buf in-flight bursts, the software loop pays 1us
+            # serially per 1D-DMA program.
+            burst = task.burst_bytes or ev.burst_bytes or ev.row_bytes
+            if sw_agu:
+                task = dataclasses.replace(
+                    task, burst_bytes=burst,
+                    issue_overhead_s=SW_ISSUE_OVERHEAD, pipeline_depth=1)
+            else:
+                task = dataclasses.replace(task, burst_bytes=burst)
+            tasks.append(task)
+        return tasks
+
+    def replay(self, topology: Topology, *, sw_agu: bool = False) -> SimReport:
+        """Simulate the captured application timeline on ``topology``."""
+        return simulate(self.sim_tasks(topology, sw_agu=sw_agu), topology)
+
+
+def current() -> Optional[TransferTrace]:
+    """The ambient capture trace, or None when capture is off."""
+    return _api._CAPTURE
+
+
+@contextlib.contextmanager
+def capture(trace: Optional[TransferTrace] = None, *, name: str = "trace"):
+    """Open a capture scope: every movement issued through the plane's
+    chokepoints records into the yielded :class:`TransferTrace`.  Nested
+    captures shadow the outer one (innermost wins)."""
+    t = trace if trace is not None else TransferTrace(name=name)
+    prev = _api._CAPTURE
+    _api._CAPTURE = t
+    try:
+        yield t
+    finally:
+        _api._CAPTURE = prev
+
+
+def replay(trace: TransferTrace, topology: Topology, *,
+           sw_agu: bool = False) -> SimReport:
+    """Module-level spelling of :meth:`TransferTrace.replay`."""
+    return trace.replay(topology, sw_agu=sw_agu)

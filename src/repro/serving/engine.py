@@ -1,14 +1,31 @@
-"""Serving engine: batched prefill + greedy decode with donated caches."""
+"""Serving engine: batched prefill + greedy decode with donated caches.
+
+Movement plane (DESIGN.md §9): ``generate`` drives every byte of serving
+data movement through a :class:`~repro.runtime.DistributedScheduler` —
+prompt staging on the h2d links, then one store+load roundtrip per cache
+tensor after prefill and after every decode step (the paper's Prefill-store
+and Load KV workloads, on the live cache, via the same link-pair pipelining
+as :func:`repro.serving.transfer.kv_roundtrips_overlapped`).  The moved
+cache is threaded back into the next decode step, so the plane is the
+datapath, not a mirror: the descriptors are value-preserving (tiled-relayout
+roundtrips when shard shapes are tile-aligned, plain copies otherwise) and
+generation is bit-identical to a planeless decode loop.  Run ``generate``
+inside :func:`repro.runtime.trace.capture` to get the complete serving
+movement ledger; ``engine.last_scheduler.report()`` has the simulated
+timeline of the most recent call.
+"""
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.descriptor import describe
 from repro.models import lm
+from repro.serving import transfer as T
 
 
 def make_serve_step(cfg: ModelConfig, *, mesh=None):
@@ -23,31 +40,92 @@ def make_serve_step(cfg: ModelConfig, *, mesh=None):
     return serve_step
 
 
+def _is_movement(leaf) -> bool:
+    """Cache/prompt leaves that are data movement (vs control state):
+    matrix-shaped floating tensors.  Scalars, position counters and id
+    vectors ride along outside the plane."""
+    return (getattr(leaf, "ndim", 0) >= 2
+            and jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating))
+
+
 class ServingEngine:
     """Minimal batched-request serving loop (greedy)."""
 
     def __init__(self, cfg: ModelConfig, params, max_len: int,
-                 cache_dtype=jnp.bfloat16, mesh=None):
+                 cache_dtype=jnp.bfloat16, mesh=None, topology=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.cache_dtype = cache_dtype
+        self.topology = topology            # serving fabric (host_device(2)
+        self.last_scheduler = None          #  link pairs when not given)
         self._prefill = jax.jit(
             functools.partial(lm.prefill, cfg, mesh=mesh))
         self._decode = jax.jit(
             functools.partial(lm.decode_step, cfg, mesh=mesh),
             donate_argnums=(2,))
 
-    def generate(self, batch: Dict[str, Any], n_steps: int):
-        """batch: prompt tensors.  Returns (B, n_steps) generated token ids."""
+    # -- the movement plane --------------------------------------------------
+    def _new_scheduler(self):
+        from repro.runtime import DistributedScheduler, Topology
+
+        topo = self.topology or Topology.host_device(2)
+        return DistributedScheduler(topo, name="serving")
+
+    def _stage_prompt(self, sched, batch: Dict[str, Any]) -> Dict[str, Any]:
+        """Prompt payloads (embeds, audio frames) enter through the h2d
+        staging links; integer id tensors pass through untouched."""
+        names = sched.topology.link_names
+        staged, futs = {}, {}
+        for k, v in batch.items():
+            arr = jnp.asarray(v)
+            if _is_movement(arr):
+                futs[k] = sched.submit(arr, describe("MN", "MN"),
+                                       link=names[0], label=f"prompt:{k}")
+            else:
+                staged[k] = arr
+        sched.flush()
+        staged.update({k: f.result() for k, f in futs.items()})
+        return staged
+
+    def _cache_through_plane(self, sched, cache, tag: str):
+        """One store+load roundtrip per cache tensor, link pairs alternating
+        per tensor so shard i+1's store overlaps shard i's load.  Returns the
+        cache rebuilt from the moved (bit-identical) buffers."""
+        leaves, treedef = jax.tree_util.tree_flatten(cache)
+        futs = {}
+        lane = 0
+        for i, leaf in enumerate(leaves):
+            if _is_movement(leaf):
+                futs[i] = T.kv_cache_roundtrip(leaf, scheduler=sched,
+                                               lane=lane, label=tag)
+                lane += 1
+        sched.flush()
+        for i, f in futs.items():
+            leaves[i] = f.result().reshape(leaves[i].shape)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # -- the serving loop ----------------------------------------------------
+    def generate(self, batch: Dict[str, Any], n_steps: int, *,
+                 scheduler=None):
+        """batch: prompt tensors.  Returns (B, n_steps) generated token ids.
+
+        All prompt/KV movement is issued through ``scheduler`` (a fresh one
+        on this engine's topology when not given; kept as
+        ``self.last_scheduler`` for reporting)."""
         lead = batch.get("tokens", batch.get("embeds"))
         B = lead.shape[0]
+        sched = scheduler if scheduler is not None else self._new_scheduler()
+        self.last_scheduler = sched
+        batch = self._stage_prompt(sched, batch)
         cache = lm.init_cache(self.cfg, B, self.max_len, self.cache_dtype)
         logits, cache = self._prefill(self.params, batch, cache)
+        cache = self._cache_through_plane(sched, cache, "kv:prefill")
         outs = []
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        for _ in range(n_steps):
+        for i in range(n_steps):
             outs.append(tok)
             logits, cache = self._decode(self.params, tok, cache)
+            cache = self._cache_through_plane(sched, cache, f"kv:decode{i}")
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return jnp.concatenate(outs, axis=1)

@@ -86,6 +86,48 @@ def kv_roundtrip_queue(dtype=jnp.float32, *, d_buf: int = 9,
     ], name="kv_roundtrip")
 
 
+# -- live-cache streaming: the serving engine's per-step KV movement ---------
+@functools.lru_cache(maxsize=None)
+def kv_plane_descs(S: int, d: int, dtype_name: str):
+    """Value-preserving store/load descriptor pair for streaming a *live*
+    cache shard through the plane: the MXU-tiled relayout roundtrip when the
+    shard is tile-aligned (the paper's Prefill-store / Load workloads; the
+    pair is an exact inverse), a plain copy otherwise.  Unlike
+    ``kv_prefill_store``/``kv_load_transposed`` these never transform values,
+    so the engine can thread the moved cache straight back into decode."""
+    dtype = jnp.dtype(dtype_name)
+    tiled = layout_for_dtype(dtype)
+    tm, tn = tiled.tile
+    if S % tm == 0 and d % tn == 0:
+        return describe(MN, tiled, d_buf=9), describe(tiled, MN, d_buf=9)
+    return describe(MN, MN), describe(MN, MN)
+
+
+def kv_cache_roundtrip(leaf: jnp.ndarray, *, scheduler, lane: int = 0,
+                       label: str = "kv"):
+    """Submit one cache tensor's store+load roundtrip onto the scheduler's
+    fabric: the store rides link-pair ``lane``'s first link (h2d), the load
+    its second (d2h), per-shard order kept by the future dependency — the
+    same pipelining shape as :func:`kv_roundtrips_overlapped`.  Returns the
+    load future; ``result()`` is the (reshaped-to-matrix) leaf, bit-equal to
+    the input."""
+    names = scheduler.topology.link_names
+    if leaf.ndim >= 3:
+        # (.., S, KV, hd) and friends -> the paper's (rows, d_kv) KV matrix
+        mat = leaf.reshape(-1, leaf.shape[-2] * leaf.shape[-1])
+    else:
+        mat = leaf
+    store, load = kv_plane_descs(int(mat.shape[-2]), int(mat.shape[-1]),
+                                 jnp.dtype(mat.dtype).name)
+    n_pairs = max(1, len(names) // 2)
+    si = (2 * (lane % n_pairs)) % len(names)
+    li = (si + 1) % len(names)
+    f_store = scheduler.submit(mat, store, link=names[si],
+                               label=f"{label}:store")
+    return scheduler.submit(f_store, load, link=names[li],
+                            label=f"{label}:load")
+
+
 # -- distributed runtime: store/load overlapped across links -----------------
 def kv_roundtrips_overlapped(kvs: Sequence[jnp.ndarray], *, scheduler=None,
                              d_buf: int = 9, eps: float = 1e-6):
