@@ -43,7 +43,11 @@ FABRICS = (
 )
 
 
-def capture_serving(n_steps: int = 3) -> TransferTrace:
+def make_serving_app(topology=None):
+    """Build the serving smoke app once: (engine, prompt).  ``topology`` is
+    the engine's serving fabric (its explicit ``host_device(2)`` default
+    otherwise); per-fabric sweeps reuse one engine and pass a per-fabric
+    scheduler to ``generate`` instead."""
     import jax
     import jax.numpy as jnp
 
@@ -57,9 +61,15 @@ def capture_serving(n_steps: int = 3) -> TransferTrace:
     cfg = dataclasses.replace(configs.smoke_config("phi4_mini_3p8b"),
                               dtype=jnp.float32, n_kv_heads=2, head_dim=128)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params, max_len=32, cache_dtype=jnp.float32)
+    eng = ServingEngine(cfg, params, max_len=32, cache_dtype=jnp.float32,
+                        topology=topology)
     prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
                                            cfg.vocab)}
+    return eng, prompt
+
+
+def capture_serving(n_steps: int = 3, topology=None) -> TransferTrace:
+    eng, prompt = make_serving_app(topology)
     with capture(name="serving") as tr:
         eng.generate(prompt, n_steps)
     return tr
@@ -122,15 +132,36 @@ def capture_all() -> Dict[str, TransferTrace]:
             "train": capture_train()}
 
 
+def _serving_traces() -> Dict[str, TransferTrace]:
+    """Serving captured once *per fabric*: the engine's KV roundtrips route
+    over the requested topology's own links (end-to-end), instead of a
+    host_device(2) capture replayed onto a fabric it never ran on.  One
+    engine (one model init + jit trace) serves every fabric via a per-call
+    scheduler."""
+    from repro.runtime import DistributedScheduler
+
+    eng, prompt = make_serving_app()
+    traces = {}
+    for fname, make in FABRICS:
+        sched = DistributedScheduler(make(), name="serving")
+        with capture(name=f"serving-{fname}") as tr:
+            eng.generate(prompt, 3, scheduler=sched)
+        traces[fname] = tr
+    return traces
+
+
 def run(csv: bool = True, sim: bool = False, timeline: str = None):
     """``sim`` is accepted for harness uniformity: this section is replay-
     only by construction (the capture executes the smoke app once; every
     reported number comes from the deterministic simulator)."""
     rows: List[tuple] = []
     spans: List[tuple] = []
-    for app, tr in capture_all().items():
+    per_fabric = {"serving": _serving_traces()}
+    captured = {"moe": capture_moe(), "train": capture_train()}
+    for app in ("serving", "moe", "train"):
         for fname, make in FABRICS:
             topo = make()
+            tr = per_fabric[app][fname] if app in per_fabric else captured[app]
             hw = tr.replay(topo)
             sw = tr.replay(topo, sw_agu=True)
             tag = f"apps/{app}/{fname}"

@@ -17,14 +17,17 @@ In a full ``--sim`` sweep, sections with no simulator mode are *skipped* (a
 smoke run must stay cheap); ``--only SECTION --sim`` still runs that section
 for real if it has no sim mode.
 
-``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR5.json``):
+``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR6.json``):
 measured relayout GB/s through the fused and generic-AGU Pallas backends,
 the simulated Fig. 4 per-link utilization sweep with the software-AGU vs
 Frontend ratio per traffic pattern, the scheduler rows with their contention
-stalls, and the ``apps`` section — captured serving/MoE/train application
+stalls, the ``apps`` section — captured serving/MoE/train application
 traces replayed on multiple fabrics under Frontend vs software-AGU costing
-(the paper's Fig. 11 end-to-end speedups, from ``benchmarks/apps.py``).
-CI uploads it as an artifact, so the repo accumulates a bench trajectory.
+(the paper's Fig. 11 end-to-end speedups, from ``benchmarks/apps.py``) —
+and the ``serving_load`` sweep (continuous vs static batching tokens/s and
+latency percentiles vs offered load, from ``benchmarks/serving_load.py``).
+The snapshot is committed into the repo (``BENCH_PR6.json``) so the bench
+trajectory diffs PR over PR; CI also uploads it as an artifact.
 """
 import argparse
 import importlib
@@ -39,6 +42,7 @@ SECTIONS = {
     "fusion": ("plugin_fusion", "compiled plugin datapath vs fused-XLA vs staged"),
     "sched": ("sched", "distributed scheduler vs in-order queue (multi-link)"),
     "apps": ("apps", "captured application traces replayed per fabric (Fig. 11)"),
+    "serving": ("serving_load", "continuous vs static batching vs offered load"),
     "roofline": ("roofline", "dry-run roofline fractions"),
 }
 
@@ -54,12 +58,12 @@ def run_section(name: str, *, sim: bool = False, skip_unsimulated: bool = False)
     if sim and skip_unsimulated and not has_sim:
         print(f"# {name}: no simulator mode, skipped in --sim sweep")
         return
-    if name == "apps" and skip_unsimulated:
-        # the app captures are the priciest setup in the suite (three model
-        # inits + jit traces); full sweeps skip them — CI runs the section
-        # once via its dedicated step, and --json embeds the same rows
-        print("# apps: skipped in full sweep (run --only apps, "
-              "benchmarks.apps, or --json)")
+    if name in ("apps", "serving") and skip_unsimulated:
+        # the app captures / serving sweeps are the priciest setups in the
+        # suite (model inits + jit traces); full sweeps skip them — CI runs
+        # each via its dedicated step, and --json embeds the same rows
+        print(f"# {name}: skipped in full sweep (run --only {name}, "
+              f"benchmarks.{SECTIONS[name][0]}, or --json)")
         return
     module.run(**({"sim": sim} if has_sim else {}))
 
@@ -116,9 +120,9 @@ def _cached_apps_rows(csv_path: str):
 
 
 def write_snapshot(path: str) -> None:
-    """The BENCH_PR5 perf snapshot: relayout GB/s, simulated utilization,
-    and the captured-application replay table."""
-    from . import apps, link_utilization, sched
+    """The BENCH_PR6 perf snapshot: relayout GB/s, simulated utilization,
+    the captured-application replay table, and the serving-load sweep."""
+    from . import apps, link_utilization, sched, serving_load
 
     import os
 
@@ -134,9 +138,10 @@ def write_snapshot(path: str) -> None:
     else:
         apps_source = "captured"
         app_rows = apps.run(csv=False, sim=True)
+    serving_rows = serving_load.run(csv=False)
     gbps = relayout_gbps()
     payload = {
-        "bench": "PR5",
+        "bench": "PR6",
         "columns": {
             "relayout_gbps": ["name", "us_per_call", "gbytes_per_s"],
             "fig4sim": ["name", "simulated_us", "utilization_or_ratio"],
@@ -144,12 +149,15 @@ def write_snapshot(path: str) -> None:
                       "contention_stalls_us"],
             "apps": ["name", "makespan_us", "utilization_or_speedup",
                      "contention_stalls_us"],
+            "serving_load": ["name", "p50_us", "tokens_per_s_or_ratio",
+                             "p99_us"],
         },
         "sections": {
             "relayout_gbps": [list(r) for r in gbps],
             "fig4sim": [list(r) for r in fig4],
             "sched": [list(r) for r in sched_rows],
             "apps": [list(r) for r in app_rows],
+            "serving_load": [list(r) for r in serving_rows],
         },
         # the paper's headline comparison axis (Fig. 4): simulated link
         # utilization of Frontend (d_buf=9) over software address generation
@@ -165,13 +173,20 @@ def write_snapshot(path: str) -> None:
         "app_speedup_frontend_vs_sw": {
             r[0]: r[2] for r in app_rows if r[0].endswith("/speedup")
         },
+        # continuous-batching tokens/s over the static gang at each offered
+        # load point x fabric (the PR-6 serving acceptance metric)
+        "continuous_over_static_tokens_ratio": {
+            r[0]: r[2] for r in serving_rows if r[0].endswith("/ratio")
+        },
         "apps_rows_source": apps_source,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# wrote {path}: {len(payload['sections'])} sections, "
           f"{len(payload['sw_vs_frontend_ratio_d9'])} fig4 ratios, "
-          f"{len(payload['app_speedup_frontend_vs_sw'])} app speedups")
+          f"{len(payload['app_speedup_frontend_vs_sw'])} app speedups, "
+          f"{len(payload['continuous_over_static_tokens_ratio'])} serving "
+          "ratios")
 
 
 def main() -> None:
@@ -183,7 +198,7 @@ def main() -> None:
                     help="list registered sections and exit")
     ap.add_argument("--sim", action="store_true",
                     help="simulator-only mode for sections that support it")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR5.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_PR6.json", default=None,
                     metavar="PATH", help="write the perf snapshot and exit")
     args = ap.parse_args()
     if args.list:

@@ -1,4 +1,4 @@
-"""Quickstart: the XDMA core in ten moves.
+"""Quickstart: the XDMA core in eleven moves.
 
   PYTHONPATH=src python examples/quickstart.py
 
@@ -8,7 +8,9 @@ deterministic utilization simulator (DESIGN.md §6); move 9 is the plugin
 compiler — a compressed store fused into a single Pallas kernel (§7);
 move 10 is the movement plane (§9) — capture a serving decode step's whole
 movement timeline and replay it on any fabric under hardware-Frontend vs
-software-AGU costing.
+software-AGU costing; move 11 is continuous-batching serving (§10) — a
+Poisson request stream over the paged-KV pool, with tokens/s and latency
+percentiles from the simulated timeline.
 """
 import jax
 import jax.numpy as jnp
@@ -121,3 +123,24 @@ hw, sw_cost = trace.replay(fabric), trace.replay(fabric, sw_agu=True)
 print(f"decode timeline on {fabric.name}: frontend {hw.makespan * 1e6:.1f}us "
       f"vs sw-AGU {sw_cost.makespan * 1e6:.1f}us "
       f"-> {sw_cost.makespan / hw.makespan:.1f}x app speedup (paper Fig. 11)")
+
+# 11. continuous-batching serving (DESIGN.md §10): a Poisson request stream
+#     over the paged-KV pool.  Requests arrive, admit, prefill, decode in a
+#     composed batch, and preempt to host under memory pressure — every KV
+#     page moving as a descriptor the capture can see.  Time is the
+#     scheduler's simulated timeline, so tokens/s and the latency
+#     percentiles are deterministic.
+from repro.serving import ContinuousBatchingEngine, poisson_stream
+
+cfg_lm = dataclasses.replace(configs.smoke_config("qwen3_1p7b"),
+                             dtype=jnp.float32)
+serve_eng = ContinuousBatchingEngine(
+    cfg_lm, lm.init_params(jax.random.PRNGKey(0), cfg_lm),
+    max_len=24, max_batch=4, cache_dtype=jnp.float32)
+stream = poisson_stream(cfg_lm, 6, 8e4, prompt_lens=(4, 8), max_new=(2, 4),
+                        seed=0)
+with capture(name="serve") as serve_trace:
+    report = serve_eng.serve(stream)
+print(report.summary())
+print(f"page movements in the ledger: {len(serve_trace.labelled('page:'))} "
+      f"(pool counted {report.pool_stats['movements']})")

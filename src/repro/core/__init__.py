@@ -13,6 +13,7 @@ from .plugins import (  # noqa: F401
 )
 from .descriptor import (  # noqa: F401
     Endpoint, XDMADescriptor, describe, reduce_descriptor,
+    page_layout, page_descriptor,
 )
 from .engine import xdma_copy, xdma_copy_jit, xdma_copy_pallas, reader, writer  # noqa: F401
 from .remote import (  # noqa: F401

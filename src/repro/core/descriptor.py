@@ -24,7 +24,8 @@ from typing import Any, Optional, Sequence, Tuple
 from . import layouts as L
 from . import plugins as P
 
-__all__ = ["Endpoint", "XDMADescriptor", "describe", "reduce_descriptor"]
+__all__ = ["Endpoint", "XDMADescriptor", "describe", "reduce_descriptor",
+           "page_layout", "page_descriptor"]
 
 _LOCAL = "local"
 _PEER = "peer"
@@ -327,3 +328,77 @@ def reduce_descriptor(axis, axis_size: int, *,
     post = (P.Dequantize(),) if compressed else ()
     return XDMADescriptor(dst=Endpoint.reduce(axis, axis_size),
                           pre=pre, post=post)
+
+
+@functools.lru_cache(maxsize=None)
+def page_layout(rows: int, cols: int, dtype_name: str) -> L.Layout:
+    """Page-resident physical layout for a (rows, cols) KV page.
+
+    Iris-style automatic layout selection, per page: among the
+    accelerator-native tiled candidates whose tiles divide the page geometry,
+    pick the one whose store relayout (``MN -> candidate``) has the longest
+    contiguous burst under the :func:`~repro.core.layouts.relayout_pair`
+    cost model — the dtype-native VREG tiling when it fits, the paper's
+    (8, 8) GeMM-array tile for narrow pages, plain ``MN`` when nothing
+    tile-aligned fits.  Strict-max keeps the dtype-native candidate on ties.
+    """
+    import jax.numpy as jnp
+
+    rows, cols = int(rows), int(cols)
+    native = L.layout_for_dtype(jnp.dtype(dtype_name))
+    candidates = [native] + [l for l in (L.MNM8N128, L.MNM16N128,
+                                         L.MNM32N128, L.MNM8N8)
+                             if l is not native]
+    best, best_burst = L.MN, None
+    for cand in candidates:
+        tm, tn = cand.tile
+        if rows % tm or cols % tn:
+            continue
+        burst = L.relayout_pair(L.MN, cand, (rows, cols)).burst_length()
+        if best_burst is None or burst > best_burst:
+            best, best_burst = cand, burst
+    return best
+
+
+@functools.lru_cache(maxsize=None)
+def page_descriptor(rows: int, cols: int, dtype_name: str, *,
+                    direction: str = "store",
+                    wire_compress_rows: int = 0,
+                    d_buf: int = 9) -> XDMADescriptor:
+    """The canonical descriptor for one fixed-size KV *page* movement — the
+    page-pool endpoint spelling every :class:`repro.serving.paged.PagedKVPool`
+    call site shares (one lru-cached CFG phase per page geometry, like
+    :func:`reduce_descriptor` for reductions).
+
+    A page is a (rows, cols) logical matrix; at rest in the pool it lives in
+    :func:`page_layout`'s tiling.  ``direction``:
+
+    * ``"store"``  — logical ``MN`` -> page layout (alloc fill / re-admit)
+    * ``"load"``   — page layout -> logical ``MN`` (batch-composition gather,
+      evict-to-host readout)
+    * ``"copy"``   — page layout -> page layout (defrag slot migration)
+
+    ``wire_compress_rows > 0`` puts the lossless block-sparse wire codec on
+    the stream (``Compress`` at the pre-writer host, ``Decompress`` at the
+    post-reader host) — the evict/restore path over host links: zero-padded
+    or drained page blocks never cross the wire, and a capture prices the
+    link by ``CTensor.wire_nbytes()``.  Values are preserved bit-exactly in
+    every direction.
+    """
+    lay = page_layout(rows, cols, dtype_name)
+    pre: Tuple[P.Plugin, ...] = ()
+    post: Tuple[P.Plugin, ...] = ()
+    if wire_compress_rows:
+        if rows % int(wire_compress_rows):
+            raise ValueError(f"page rows {rows} not divisible by wire "
+                             f"compress block {wire_compress_rows}")
+        pre = (P.Compress(block_rows=int(wire_compress_rows)),)
+        post = (P.Decompress(),)
+    if direction == "store":
+        return describe(L.MN, lay, pre=pre, post=post, d_buf=d_buf)
+    if direction == "load":
+        return describe(lay, L.MN, pre=pre, post=post, d_buf=d_buf)
+    if direction == "copy":
+        return describe(lay, lay, pre=pre, post=post, d_buf=d_buf)
+    raise ValueError(f"unknown page direction {direction!r}; "
+                     "one of 'store', 'load', 'copy'")

@@ -211,12 +211,24 @@ def decode_attention(q, k_cache, v_cache, length, *, rolling=False):
     qh = q[:, 0].reshape(B, KV, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qh, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    valid = jnp.arange(Smax) < jnp.minimum(length, Smax)
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    s = _mask_valid(s, length, Smax)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _mask_valid(s, length, Smax):
+    """Mask scores (B,KV,G,Smax) beyond the valid cache prefix.  ``length``
+    is a scalar (uniform batch — the compiled program is unchanged) or a
+    (B,) vector of per-request lengths (continuous batching, where ragged
+    requests share one decode step)."""
+    lv = jnp.minimum(jnp.asarray(length), Smax)
+    if lv.ndim:
+        valid = jnp.arange(Smax)[None] < lv[:, None]          # (B, Smax)
+        return jnp.where(valid[:, None, None, :], s, NEG_INF)
+    valid = jnp.arange(Smax) < lv
+    return jnp.where(valid[None, None, None], s, NEG_INF)
 
 
 def decode_attention_xdma(q, kt_cache, v_cache, length):
@@ -231,8 +243,7 @@ def decode_attention_xdma(q, kt_cache, v_cache, length):
     qh = q[:, 0].reshape(B, KV, G, hd)
     s = jnp.einsum("bkgh,bkhs->bkgs", qh, kt_cache,
                    preferred_element_type=jnp.float32) * scale
-    valid = jnp.arange(Smax) < jnp.minimum(length, Smax)
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    s = _mask_valid(s, length, Smax)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bksh->bkgh", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -246,7 +257,9 @@ def attn_apply(cfg, p, x, positions, *, causal=True, window=None,
 
     train/prefill: ``cache=None`` -> flash-chunked attention over x (or kv_x
     for cross-attention).  decode: ``cache`` = {"k","v"} (B,Smax,KV,hd) plus
-    scalar ``cache_pos``; returns (out, new_cache).
+    ``cache_pos`` — a scalar (uniform batch; unchanged compiled program) or a
+    (B,) vector of per-request positions (ragged continuous batching);
+    returns (out, new_cache).
     """
     B, S, d = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -318,12 +331,19 @@ def attn_apply(cfg, p, x, positions, *, causal=True, window=None,
         Smax = cache["k"].shape[3]
         slot = cache_pos % Smax if window is not None else jnp.minimum(cache_pos, Smax - 1)
         dt_c = cache["k"].dtype
-        knew = k[:, 0][..., None]                       # (B,KV,hd,1)
-        vnew = v[:, 0][:, :, None, :]                   # (B,KV,1,hd)
-        ck = lax.dynamic_update_slice(cache["k"], knew.astype(dt_c),
-                                      (0, 0, 0, slot))
-        cv = lax.dynamic_update_slice(cache["v"], vnew.astype(dt_c),
-                                      (0, 0, slot, 0))
+        if getattr(cache_pos, "ndim", 0) >= 1:
+            # ragged batch (continuous batching): per-request write slots —
+            # advanced-index scatter, one slot per batch row
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, :, :, slot].set(k[:, 0].astype(dt_c))
+            cv = cache["v"].at[bidx, :, slot, :].set(v[:, 0].astype(dt_c))
+        else:
+            knew = k[:, 0][..., None]                   # (B,KV,hd,1)
+            vnew = v[:, 0][:, :, None, :]               # (B,KV,1,hd)
+            ck = lax.dynamic_update_slice(cache["k"], knew.astype(dt_c),
+                                          (0, 0, 0, slot))
+            cv = lax.dynamic_update_slice(cache["v"], vnew.astype(dt_c),
+                                          (0, 0, slot, 0))
         ck = constrain(ck, kv_cache_spec(cfg.axes, KV, "bkhs"))
         cv = constrain(cv, kv_cache_spec(cfg.axes, KV, "bksh"))
         cache = dict(cache, k=ck, v=cv)
@@ -331,10 +351,15 @@ def attn_apply(cfg, p, x, positions, *, causal=True, window=None,
     else:
         Smax = cache["k"].shape[1]
         slot = cache_pos % Smax if window is not None else jnp.minimum(cache_pos, Smax - 1)
-        ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-        cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
+        if getattr(cache_pos, "ndim", 0) >= 1:
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+            cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
         cspec = kv_cache_spec(cfg.axes, KV)
         ck = constrain(ck, cspec)
         cv = constrain(cv, cspec)

@@ -417,7 +417,11 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, *, mesh=None):
     else:
         x = E.embed(cfg, params["embed"], tokens)
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    if getattr(pos, "ndim", 0) >= 1:
+        # ragged batch: per-request positions, shape (B,) -> (B, 1)
+        positions = pos.astype(jnp.int32)[:, None]
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
 
     def block_body(carry, xs):
         x = carry

@@ -346,6 +346,11 @@ class DistributedScheduler:
         """Deterministic replay of everything dispatched so far."""
         return simulate(self.sim_tasks(), self.topology)
 
+    def makespan(self) -> float:
+        """Simulated seconds to drain everything dispatched so far — the
+        serving engines' per-step clock advance."""
+        return self.report().makespan
+
     def summary(self) -> str:
         lines = [f"DistributedScheduler({self.name!r}, "
                  f"{len(self._tasks)} tasks, {self._rounds} rounds)"]

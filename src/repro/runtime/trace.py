@@ -348,6 +348,12 @@ class TransferTrace:
     def xdma_events(self) -> List[TraceEvent]:
         return [e for e in self.events if e.kind == "xdma"]
 
+    def labelled(self, prefix: str) -> List[TraceEvent]:
+        """Events whose label starts with ``prefix`` — the accounting hook
+        for subsystems that tag their traffic (``page:`` for the paged-KV
+        pool, ``kv:`` for the fixed-batch engine's cache roundtrips)."""
+        return [e for e in self.events if e.label.startswith(prefix)]
+
     def by_endpoint(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
         for e in self.xdma_events():

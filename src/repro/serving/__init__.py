@@ -1,2 +1,8 @@
 from .engine import ServingEngine, make_serve_step  # noqa: F401
 from .transfer import kv_prefill_store, kv_load_transposed, cross_stage_transfer  # noqa: F401
+from .paged import (  # noqa: F401
+    Page, PagedKVPool, default_serving_topology, paginate, depaginate,
+    pages_for_rows, DEFAULT_PAGE_ROWS,
+)
+from .requests import Request, poisson_stream, trace_stream, uniform_stream  # noqa: F401
+from .continuous import ContinuousBatchingEngine, StaticBatchEngine, ServeReport  # noqa: F401

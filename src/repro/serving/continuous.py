@@ -1,0 +1,564 @@
+"""Continuous batching over the paged-KV pool: admission, composition,
+preemption — every KV byte moving as a page descriptor.
+
+The engine holds no per-request cache tensors.  A request's KV state lives
+in :class:`~repro.serving.paged.PagedKVPool` pages — the *valid prefix* of
+each sequence-indexed cache leaf, paged as fixed-row tiles — plus an integer
+position.  Each serving step:
+
+1. **re-admission** — preempted requests restore their pages (oldest first)
+   when slots free up;
+2. **admission** — arrived requests join while the batch has room and the
+   pool can hold their prompt pages;
+3. **prefill** — admitted prompts run the existing jitted ``lm.prefill``
+   (grouped by prompt length), and the valid prefix of every cache leaf
+   scatters into fresh pages;
+4. **preemption** — if the next decode's page growth exceeds the free pool,
+   the youngest requests evict wholesale to host (Compress wire codec)
+   until the rest fit;
+5. **decode** — active pages gather into a batch cache (page-table
+   indirection in reverse), one jitted ``lm.decode_step`` advances every
+   active request — a scalar position when the batch is aligned (the exact
+   compiled program ``ServingEngine`` runs, which is what makes the parity
+   tests bit-exact) or a per-request position vector when ragged — and the
+   dirty pages scatter back;
+6. the simulated clock advances by the step's scheduler makespan.
+
+``StaticBatchEngine`` is the baseline: same pool, same kernels, but gang
+admission only (a new batch forms only when the previous one fully drains,
+and finished members keep occupying batch rows and page traffic until the
+gang completes).  ``benchmarks/serving_load.py`` sweeps both against offered
+load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.runtime import DistributedScheduler
+from repro.serving.paged import (PagedKVPool, default_serving_topology,
+                                 pages_for_rows, DEFAULT_PAGE_ROWS)
+from repro.serving.requests import Request
+
+__all__ = ["ContinuousBatchingEngine", "StaticBatchEngine", "ServeReport"]
+
+HW_FLOPS = 50e12                # matches the MoE capacity-planner's engine
+
+
+# ---------------------------------------------------------------------------
+# cache-leaf geometry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _LeafMeta:
+    """How one cache leaf pages: where its batch/sequence axes are and the
+    canonical (rows, cols) matrix view the pool stores.
+
+    kind: 'pos' (the shared position counter), 'const' (no batch axis —
+    broadcast from the template), 'seq' (sequence-indexed: only the valid
+    prefix pages, so memory grows with decoded tokens), 'state' (per-request
+    but not sequence-indexed — SSM states, rolling-window caches — paged
+    whole every step)."""
+
+    index: int
+    kind: str
+    batch_axis: int = -1
+    seq_axis: int = -1              # in the full (batched) leaf
+    rpt: int = 1                    # canonical rows per token (seq leaves)
+    rows: int = 0                   # total canonical rows (B=1 leaf)
+    cols: int = 1
+
+    def seq_axis_nb(self) -> int:
+        """Sequence axis after the batch axis is removed."""
+        return self.seq_axis - (1 if self.batch_axis < self.seq_axis else 0)
+
+
+def _leaf_metas(cfg, max_len: int, cache_dtype) -> Tuple[List[_LeafMeta], Any]:
+    """Classify every cache leaf by probing ``init_cache`` shapes at
+    (B=1, L), (B=2, L) and (B=1, 2L) — the axis that moves with B is the
+    batch axis, the one that moves with L is the sequence axis.  Leaves
+    invariant to L (rolling windows shorter than max_len, SSM states) page
+    whole.  Returns (metas, B=1 shape template)."""
+    probe = lambda b, l: jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, b, l, cache_dtype))
+    t1, t2, tl = probe(1, max_len), probe(2, max_len), probe(1, 2 * max_len)
+    p1, tree = jax.tree_util.tree_flatten_with_path(t1)
+    l2 = jax.tree_util.tree_leaves(t2)
+    ll = jax.tree_util.tree_leaves(tl)
+    metas: List[_LeafMeta] = []
+    for i, ((path, a), b, c) in enumerate(zip(p1, l2, ll)):
+        keys = jax.tree_util.keystr(path)
+        if "pos" in keys and a.ndim == 0:
+            metas.append(_LeafMeta(i, "pos"))
+            continue
+        batch_ax = next((j for j in range(a.ndim)
+                         if a.shape[j] != b.shape[j]), -1)
+        if batch_ax < 0:
+            metas.append(_LeafMeta(i, "const"))
+            continue
+        nb = a.shape[:batch_ax] + a.shape[batch_ax + 1:]
+        if len(nb) < 1:
+            raise NotImplementedError(f"cache leaf {keys} has no state "
+                                      "beyond the batch axis")
+        cols = int(nb[-1])
+        seq_ax = next((j for j in range(a.ndim)
+                       if a.shape[j] != c.shape[j]), -1)
+        if seq_ax < 0:
+            rows = int(np.prod(nb[:-1], dtype=np.int64)) if len(nb) > 1 else 1
+            metas.append(_LeafMeta(i, "state", batch_axis=batch_ax,
+                                   rows=rows, cols=cols))
+            continue
+        seq_nb = seq_ax - (1 if batch_ax < seq_ax else 0)
+        S = int(a.shape[seq_ax])
+        rest = tuple(d for j, d in enumerate(nb) if j != seq_nb)
+        if not rest:
+            raise NotImplementedError(f"cache leaf {keys}: sequence axis is "
+                                      "the only non-batch axis")
+        cols = int(rest[-1])
+        rpt = int(np.prod(rest[:-1], dtype=np.int64)) if len(rest) > 1 else 1
+        metas.append(_LeafMeta(i, "seq", batch_axis=batch_ax, seq_axis=seq_ax,
+                               rpt=rpt, rows=S * rpt, cols=cols))
+    return metas, t1
+
+
+def _to_canonical(meta: _LeafMeta, leaf_nb: jnp.ndarray) -> jnp.ndarray:
+    """Per-request leaf (batch axis removed) -> the (rows, cols) matrix the
+    pool pages.  Sequence leaves put the token axis outermost so the valid
+    prefix is a row prefix."""
+    if meta.kind == "seq":
+        x = jnp.moveaxis(leaf_nb, meta.seq_axis_nb(), 0)
+        return x.reshape(meta.rows, meta.cols)
+    return leaf_nb.reshape(meta.rows, meta.cols)
+
+
+def _from_canonical(meta: _LeafMeta, mat: jnp.ndarray,
+                    nb_shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Inverse of :func:`_to_canonical`."""
+    if meta.kind == "seq":
+        seq_nb = meta.seq_axis_nb()
+        S = nb_shape[seq_nb]
+        rest = tuple(d for j, d in enumerate(nb_shape) if j != seq_nb)
+        return jnp.moveaxis(mat.reshape((S,) + rest), 0, seq_nb)
+    return mat.reshape(nb_shape)
+
+
+# ---------------------------------------------------------------------------
+# request state + report
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _ReqState:
+    req: Request
+    status: str = "queued"          # queued | active | preempted | done
+    pos: int = 0                    # tokens resident in the (logical) cache
+    generated: List[int] = dataclasses.field(default_factory=list)
+    pages: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    finish_s: float = -1.0
+
+    @property
+    def done_tokens(self) -> bool:
+        return len(self.generated) >= self.req.max_new
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What a serve() run produced: per-request tokens plus the load-side
+    aggregates (simulated time base — the scheduler's costed timeline)."""
+
+    engine: str
+    n_requests: int
+    total_tokens: int
+    elapsed_s: float
+    tokens_per_s: float
+    p50_s: float
+    p99_s: float
+    steps: int
+    preemptions: int
+    pool_stats: Dict[str, int]
+    tokens: Dict[int, np.ndarray]
+
+    def summary(self) -> str:
+        return (f"{self.engine}: {self.n_requests} reqs, "
+                f"{self.total_tokens} toks in {self.elapsed_s * 1e6:.1f}us "
+                f"-> {self.tokens_per_s:,.0f} tok/s, "
+                f"p50 {self.p50_s * 1e6:.1f}us p99 {self.p99_s * 1e6:.1f}us, "
+                f"{self.preemptions} preemptions")
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+class ContinuousBatchingEngine:
+    """Serve a request stream with per-step admission over a paged-KV pool.
+
+    The decode program is the same jitted ``lm.decode_step`` the fixed-batch
+    :class:`~repro.serving.engine.ServingEngine` runs — when every active
+    request sits at the same position the composed cache uses a scalar
+    ``pos`` and the compiled program (and thus every generated token) is
+    bit-identical to the fixed-batch engine's.
+    """
+
+    name = "continuous"
+
+    def __init__(self, cfg, params, max_len: int, *, max_batch: int = 4,
+                 cache_dtype=jnp.float32, topology=None,
+                 pool: Optional[PagedKVPool] = None,
+                 page_rows: int = DEFAULT_PAGE_ROWS,
+                 capacity_pages: Optional[int] = None,
+                 defrag: bool = True, mesh=None):
+        if cfg.encoder_layers:
+            raise NotImplementedError("continuous batching serves decoder "
+                                      "LMs; encoder-decoder configs use "
+                                      "ServingEngine")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = int(max_len)
+        self.max_batch = int(max_batch)
+        self.cache_dtype = cache_dtype
+        self.topology = topology if topology is not None \
+            else default_serving_topology()
+        self.auto_defrag = defrag
+        self.pool = pool if pool is not None else PagedKVPool(
+            capacity_pages if capacity_pages is not None else 64, page_rows)
+        self.metas, self._template = _leaf_metas(cfg, max_len, cache_dtype)
+        self._prefill = jax.jit(functools.partial(lm.prefill, cfg, mesh=mesh))
+        self._decode = jax.jit(functools.partial(lm.decode_step, cfg,
+                                                 mesh=mesh),
+                               donate_argnums=(2,))
+        self._n_params = sum(
+            int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params)
+            if getattr(l, "ndim", 0) >= 1)
+        self.last_scheduler = None
+        self.steps = 0
+        self.preemptions = 0
+
+    # -- page accounting -----------------------------------------------------
+    def _pages_at(self, meta: _LeafMeta, pos: int) -> int:
+        """Pool pages leaf ``meta`` occupies when ``pos`` tokens are valid."""
+        if meta.kind == "seq":
+            rows = min(pos, self.max_len) * meta.rpt
+        elif meta.kind == "state":
+            rows = meta.rows
+        else:
+            return 0
+        return pages_for_rows(rows, self.pool.page_rows)
+
+    def _footprint(self, pos: int) -> int:
+        return sum(self._pages_at(m, pos) for m in self.metas)
+
+    def _growth(self, pos: int) -> int:
+        return self._footprint(pos + 1) - self._footprint(pos)
+
+    # -- page scatter/gather -------------------------------------------------
+    def _scatter(self, st: _ReqState, cache_b1, *, deps=(), dirty_from=None,
+                 label: str = "store") -> None:
+        """Write one request's cache (a B=1 slice) into its pages.  With
+        ``dirty_from`` (a token position), sequence leaves only store the
+        pages overlapping rows written at/after that position — one decode
+        step dirties a single page per leaf in the common case."""
+        leaves = jax.tree_util.tree_leaves(cache_b1)
+        R = self.pool.page_rows
+        dtype_name = str(jnp.dtype(self.cache_dtype))
+        for m in self.metas:
+            if m.kind in ("pos", "const"):
+                continue
+            leaf_nb = jnp.squeeze(leaves[m.index], axis=m.batch_axis)
+            mat = _to_canonical(m, leaf_nb)
+            plist = st.pages.setdefault(m.index, [])
+            want = self._pages_at(m, st.pos)
+            if m.kind == "seq" and dirty_from is not None:
+                first = (min(dirty_from, self.max_len - 1) * m.rpt) // R
+            else:
+                first = 0
+            for j in range(first, want):
+                if j >= len(plist):
+                    plist.append(self.pool.alloc(m.cols, dtype_name))
+                page_mat = jax.lax.dynamic_slice_in_dim(
+                    mat, j * R, R) if (j + 1) * R <= m.rows else jnp.pad(
+                    mat[j * R:], ((0, (j + 1) * R - m.rows), (0, 0)))
+                self.pool.store(plist[j], page_mat, deps=deps, label=label)
+
+    def _gather(self, st: _ReqState):
+        """Reassemble one request's cache leaves from its pages.  Returns
+        (futures keyed by leaf index, each a list of page futures)."""
+        futs: Dict[int, List[Any]] = {}
+        for m in self.metas:
+            if m.kind in ("pos", "const"):
+                continue
+            futs[m.index] = [self.pool.load(pid)
+                             for pid in st.pages.get(m.index, [])]
+        return futs
+
+    def _compose_leaf(self, m: _LeafMeta, st: _ReqState,
+                      page_vals: List[jnp.ndarray]) -> jnp.ndarray:
+        """Pages -> one per-request cache leaf (batch axis restored), the
+        unvalidated tail zero-filled exactly as ``init_cache`` leaves it."""
+        R = self.pool.page_rows
+        have = len(page_vals) * R
+        if page_vals:
+            mat = jnp.concatenate(page_vals, axis=0)
+            if have < m.rows:
+                mat = jnp.pad(mat, ((0, m.rows - have), (0, 0)))
+            else:
+                mat = mat[:m.rows]
+        else:
+            mat = jnp.zeros((m.rows, m.cols), self.cache_dtype)
+        t_leaf = jax.tree_util.tree_leaves(self._template)[m.index]
+        nb_shape = (t_leaf.shape[:m.batch_axis]
+                    + t_leaf.shape[m.batch_axis + 1:])
+        return jnp.expand_dims(_from_canonical(m, mat, nb_shape),
+                               m.batch_axis)
+
+    # -- batch composition ---------------------------------------------------
+    def _compose_cache(self, active: List[_ReqState],
+                       gathered: List[Dict[int, List[Any]]]):
+        """Per-request pages -> one batched decode cache.  Scalar ``pos``
+        when the batch is position-aligned (identical compiled program to
+        the fixed-batch engine), per-request vector otherwise."""
+        t_leaves, treedef = jax.tree_util.tree_flatten(self._template)
+        out = list(t_leaves)
+        for m in self.metas:
+            if m.kind == "pos":
+                poss = [min(st.pos, self.max_len) for st in active]
+                out[m.index] = (jnp.asarray(poss[0], jnp.int32)
+                                if len(set(poss)) == 1
+                                else jnp.asarray(poss, jnp.int32))
+            elif m.kind == "const":
+                out[m.index] = t_leaves[m.index]
+            else:
+                parts = [self._compose_leaf(
+                    m, st, [f.result() for f in gathered[i][m.index]])
+                    for i, st in enumerate(active)]
+                out[m.index] = jnp.concatenate(parts, axis=m.batch_axis)
+        # const template leaves are ShapeDtypeStructs; realize them
+        for m in self.metas:
+            if m.kind == "const":
+                out[m.index] = jnp.zeros(t_leaves[m.index].shape,
+                                         t_leaves[m.index].dtype)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _split_cache(self, cache, n: int):
+        """Batched cache -> per-request B=1 caches (for page scatter)."""
+        leaves, treedef = jax.tree_util.tree_flatten(cache)
+        outs = []
+        for i in range(n):
+            li = list(leaves)
+            for m in self.metas:
+                if m.kind in ("seq", "state"):
+                    li[m.index] = jax.lax.dynamic_slice_in_dim(
+                        leaves[m.index], i, 1, axis=m.batch_axis)
+            outs.append(jax.tree_util.tree_unflatten(treedef, li))
+        return outs
+
+    # -- admission policy ----------------------------------------------------
+    def _admit(self, active, preempted, queue, clock):
+        """Default (continuous) policy: restore preempted oldest-first, then
+        admit arrivals while the batch and the pool have room."""
+        restored = []
+        while preempted and len(active) < self.max_batch:
+            st = preempted[0]
+            need = sum(len(v) for v in st.pages.values())
+            if need > self.pool.free_pages:
+                break
+            preempted.pop(0)
+            for plist in st.pages.values():
+                for pid in plist:
+                    self.pool.restore(pid)
+            st.status = "active"
+            active.append(st)
+            restored.append(st)
+        admitted = []
+        while queue and len(active) < self.max_batch:
+            st = queue[0]
+            if st.req.arrival_s > clock:
+                break
+            if self._footprint(st.req.prompt_len) > self.pool.free_pages:
+                break
+            queue.pop(0)
+            st.status = "active"
+            active.append(st)
+            admitted.append(st)
+        return restored, admitted
+
+    def _gang_done(self, active) -> bool:     # continuous: free immediately
+        return False
+
+    # -- the serving loop ----------------------------------------------------
+    def serve(self, requests: Sequence[Request], *,
+              max_steps: int = 10_000) -> ServeReport:
+        for r in requests:
+            if r.total_len > self.max_len:
+                raise ValueError(f"request {r.rid}: prompt {r.prompt_len} + "
+                                 f"max_new {r.max_new} exceeds max_len "
+                                 f"{self.max_len}")
+        queue = [_ReqState(r) for r in
+                 sorted(requests, key=lambda r: (r.arrival_s, r.rid))]
+        states = {st.req.rid: st for st in queue}
+        active: List[_ReqState] = []
+        preempted: List[_ReqState] = []
+        clock = 0.0
+        self.steps = 0
+        self.preemptions = 0
+
+        while (queue or active or preempted) and self.steps < max_steps:
+            if not active and not preempted and queue \
+                    and queue[0].req.arrival_s > clock:
+                clock = queue[0].req.arrival_s     # idle: jump to next arrival
+            sched = DistributedScheduler(self.topology, name="serving-cb")
+            self.last_scheduler = sched
+            self.pool.bind(sched)
+
+            restored, admitted = self._admit(active, preempted, queue, clock)
+            if restored:
+                sched.flush()
+                self.pool.commit()                 # restored pages land now
+
+            # prefill new admissions, grouped by prompt length so one jitted
+            # program covers each group (and a gang of equal prompts runs the
+            # exact fixed-batch prefill program)
+            by_len: Dict[int, List[_ReqState]] = {}
+            for st in admitted:
+                by_len.setdefault(st.req.prompt_len, []).append(st)
+            for plen, group in sorted(by_len.items()):
+                toks = jnp.asarray(np.stack([st.req.tokens for st in group]),
+                                   jnp.int32)
+                cache0 = lm.init_cache(self.cfg, len(group), self.max_len,
+                                       self.cache_dtype)
+                logits, cache = self._prefill(self.params,
+                                              {"tokens": toks}, cache0)
+                cost = 2.0 * self._n_params * len(group) * plen / HW_FLOPS
+                cfut = sched.submit_compute(lambda *a: None, cost_s=cost,
+                                            label=f"compute:prefill:{plen}")
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+                for i, st in enumerate(group):
+                    st.pos = plen
+                    st.generated.append(int(nxt[i]))
+                for i, (st, c1) in enumerate(
+                        zip(group, self._split_cache(cache, len(group)))):
+                    self._scatter(st, c1, deps=(cfut,), label="store")
+            if admitted:
+                sched.flush()
+                self.pool.commit()
+
+            if not active:
+                self.steps += 1
+                continue
+
+            # memory pressure: will the next decode's page growth fit?
+            decoding = [st for st in active if not st.done_tokens
+                        or self._gang_member(st)]
+            growth = sum(self._growth(st.pos) for st in decoding)
+            while growth > self.pool.free_pages and len(active) > 1:
+                victim = max(active, key=lambda s: s.req.arrival_s)
+                active.remove(victim)
+                for plist in victim.pages.values():
+                    for pid in plist:
+                        self.pool.evict(pid)
+                victim.status = "preempted"
+                preempted.append(victim)
+                preempted.sort(key=lambda s: s.req.arrival_s)
+                self.preemptions += 1
+                sched.flush()
+                self.pool.commit()                 # slots free for the rest
+                decoding = [st for st in active if not st.done_tokens
+                            or self._gang_member(st)]
+                growth = sum(self._growth(st.pos) for st in decoding)
+
+            # gather -> compose -> decode -> scatter dirty pages
+            gathered = [self._gather(st) for st in active]
+            sched.flush()
+            cache = self._compose_cache(active, gathered)
+            toks = jnp.asarray([[st.generated[-1]] for st in active],
+                               jnp.int32)
+            logits, cache = self._decode(self.params, toks, cache)
+            gfuts = [f for g in gathered for fl in g.values() for f in fl]
+            cost = 2.0 * self._n_params * len(active) / HW_FLOPS
+            cfut = sched.submit_compute(lambda *a: None, *gfuts, cost_s=cost,
+                                        label="compute:decode")
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for i, (st, c1) in enumerate(
+                    zip(active, self._split_cache(cache, len(active)))):
+                written = st.pos                   # decode wrote this slot
+                st.pos = min(st.pos + 1, self.max_len)
+                if not st.done_tokens:
+                    st.generated.append(int(nxt[i]))
+                self._scatter(st, c1, deps=(cfut,), dirty_from=written,
+                              label="decode")
+            sched.flush()
+            self.pool.commit()
+            if self.auto_defrag and self.pool.fragmentation():
+                self.pool.defrag()
+                sched.flush()
+                self.pool.commit()
+
+            clock += sched.makespan()
+            self.steps += 1
+
+            # completions: continuous frees a request the step it drains;
+            # a static gang keeps its finished rows resident (finish time
+            # still stamped at their own last token) until everyone drains
+            holds = self._gang_holds(active)
+            for st in [s for s in active if s.done_tokens]:
+                if holds:
+                    if st.finish_s < 0:
+                        st.finish_s = clock
+                else:
+                    self._finish(st, active, clock)
+
+        return self._report(states, clock)
+
+    def _gang_member(self, st: _ReqState) -> bool:
+        return False                               # continuous: no gangs
+
+    def _gang_holds(self, active) -> bool:
+        return False                               # continuous: no gangs
+
+    def _finish(self, st: _ReqState, active: List[_ReqState],
+                clock: float) -> None:
+        active.remove(st)
+        st.status = "done"
+        if st.finish_s < 0:
+            st.finish_s = clock
+        for plist in st.pages.values():
+            for pid in plist:
+                self.pool.free(pid)
+        st.pages.clear()
+
+    def _report(self, states, clock) -> ServeReport:
+        done = [st for st in states.values() if st.status == "done"]
+        lats = np.asarray([st.finish_s - st.req.arrival_s for st in done]) \
+            if done else np.asarray([0.0])
+        total = sum(len(st.generated) for st in done)
+        return ServeReport(
+            engine=self.name, n_requests=len(done), total_tokens=total,
+            elapsed_s=clock, tokens_per_s=total / clock if clock else 0.0,
+            p50_s=float(np.percentile(lats, 50)),
+            p99_s=float(np.percentile(lats, 99)),
+            steps=self.steps, preemptions=self.preemptions,
+            pool_stats=dict(self.pool.stats),
+            tokens={st.req.rid: np.asarray(st.generated, np.int32)
+                    for st in done})
+
+
+class StaticBatchEngine(ContinuousBatchingEngine):
+    """The fixed-gang baseline: admission only when the engine is empty, and
+    the gang holds its batch rows (decode compute + full page traffic) until
+    every member drains — the serving shape ``ServingEngine.generate``
+    implements, extended with arrivals and queueing."""
+
+    name = "static"
+
+    def _admit(self, active, preempted, queue, clock):
+        if active:                                 # gang still draining
+            return [], []
+        return super()._admit(active, preempted, queue, clock)
+
+    def _gang_member(self, st: _ReqState) -> bool:
+        return True                                # finished rows keep going
+
+    def _gang_holds(self, active) -> bool:
+        return not all(st.done_tokens for st in active)

@@ -53,12 +53,18 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, max_len: int,
                  cache_dtype=jnp.bfloat16, mesh=None, topology=None):
+        from repro.serving.paged import default_serving_topology
+
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.cache_dtype = cache_dtype
-        self.topology = topology            # serving fabric (host_device(2)
-        self.last_scheduler = None          #  link pairs when not given)
+        # the serving fabric is resolved here, once — callers see the actual
+        # topology on the engine instead of a fallback buried in the
+        # scheduler factory
+        self.topology = (topology if topology is not None
+                         else default_serving_topology())
+        self.last_scheduler = None
         self._prefill = jax.jit(
             functools.partial(lm.prefill, cfg, mesh=mesh))
         self._decode = jax.jit(
@@ -67,10 +73,9 @@ class ServingEngine:
 
     # -- the movement plane --------------------------------------------------
     def _new_scheduler(self):
-        from repro.runtime import DistributedScheduler, Topology
+        from repro.runtime import DistributedScheduler
 
-        topo = self.topology or Topology.host_device(2)
-        return DistributedScheduler(topo, name="serving")
+        return DistributedScheduler(self.topology, name="serving")
 
     def _stage_prompt(self, sched, batch: Dict[str, Any]) -> Dict[str, Any]:
         """Prompt payloads (embeds, audio frames) enter through the h2d
