@@ -43,6 +43,22 @@ FABRICS = (
 )
 
 
+def _reconciled(tr: TransferTrace) -> TransferTrace:
+    """PR-7 acceptance gate, run on every app capture: the live telemetry
+    per-link byte counters (``bank("links")``, what ``snapshot()`` reports)
+    must agree bit-exactly with the capture's movement ledger.  Callers
+    ``telemetry.reset("links")`` right before the capture opens."""
+    from repro.runtime import telemetry
+
+    ledger = tr.per_link_bytes()
+    counted = {k: v for k, v
+               in telemetry.bank("links").with_prefix("bytes:").items() if v}
+    assert counted == ledger, (
+        f"telemetry counters drifted from the {tr.name!r} ledger: "
+        f"{counted} != {ledger}")
+    return tr
+
+
 def make_serving_app(topology=None):
     """Build the serving smoke app once: (engine, prompt).  ``topology`` is
     the engine's serving fabric (its explicit ``host_device(2)`` default
@@ -69,10 +85,13 @@ def make_serving_app(topology=None):
 
 
 def capture_serving(n_steps: int = 3, topology=None) -> TransferTrace:
+    from repro.runtime import telemetry
+
     eng, prompt = make_serving_app(topology)
+    telemetry.reset("links")
     with capture(name="serving") as tr:
         eng.generate(prompt, n_steps)
-    return tr
+    return _reconciled(tr)
 
 
 def capture_moe() -> TransferTrace:
@@ -97,11 +116,13 @@ def capture_moe() -> TransferTrace:
                              batch_size=1))
     sched = DistributedScheduler(Topology.parallel(2, prefix="a2a"),
                                  name="moe")
+    from repro.runtime import telemetry
+    telemetry.reset("links")
     with capture(name="moe") as tr:
         with mesh:
             jax.jit(lambda xx: MOE.moe_apply(cfg, p, xx, mesh=mesh,
                                              scheduler=sched))(x)
-    return tr
+    return _reconciled(tr)
 
 
 def capture_train() -> TransferTrace:
@@ -121,10 +142,12 @@ def capture_train() -> TransferTrace:
     mesh = jax.make_mesh((1,), ("dp",))
     step = make_dp_train_step(cfg, shape, mesh=mesh, axis="dp",
                               compressed=True)
+    from repro.runtime import telemetry
+    telemetry.reset("links")
     with capture(name="train") as tr:
         batch = stage_batch(ds.batch_at(0), jnp.float32)
         step(state, batch)
-    return tr
+    return _reconciled(tr)
 
 
 def capture_all() -> Dict[str, TransferTrace]:
@@ -138,15 +161,16 @@ def _serving_traces() -> Dict[str, TransferTrace]:
     host_device(2) capture replayed onto a fabric it never ran on.  One
     engine (one model init + jit trace) serves every fabric via a per-call
     scheduler."""
-    from repro.runtime import DistributedScheduler
+    from repro.runtime import DistributedScheduler, telemetry
 
     eng, prompt = make_serving_app()
     traces = {}
     for fname, make in FABRICS:
         sched = DistributedScheduler(make(), name="serving")
+        telemetry.reset("links")
         with capture(name=f"serving-{fname}") as tr:
             eng.generate(prompt, 3, scheduler=sched)
-        traces[fname] = tr
+        traces[fname] = _reconciled(tr)
     return traces
 
 

@@ -17,7 +17,7 @@ In a full ``--sim`` sweep, sections with no simulator mode are *skipped* (a
 smoke run must stay cheap); ``--only SECTION --sim`` still runs that section
 for real if it has no sim mode.
 
-``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR6.json``):
+``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR7.json``):
 measured relayout GB/s through the fused and generic-AGU Pallas backends,
 the simulated Fig. 4 per-link utilization sweep with the software-AGU vs
 Frontend ratio per traffic pattern, the scheduler rows with their contention
@@ -26,8 +26,9 @@ traces replayed on multiple fabrics under Frontend vs software-AGU costing
 (the paper's Fig. 11 end-to-end speedups, from ``benchmarks/apps.py``) —
 and the ``serving_load`` sweep (continuous vs static batching tokens/s and
 latency percentiles vs offered load, from ``benchmarks/serving_load.py``).
-The snapshot is committed into the repo (``BENCH_PR6.json``) so the bench
-trajectory diffs PR over PR; CI also uploads it as an artifact.
+The snapshot is committed into the repo (``BENCH_PR7.json``) so the bench
+trajectory diffs PR over PR; CI also uploads it as an artifact and diffs it
+against the previous snapshot with ``scripts/bench_diff.py``.
 """
 import argparse
 import importlib
@@ -120,7 +121,7 @@ def _cached_apps_rows(csv_path: str):
 
 
 def write_snapshot(path: str) -> None:
-    """The BENCH_PR6 perf snapshot: relayout GB/s, simulated utilization,
+    """The BENCH_PR7 perf snapshot: relayout GB/s, simulated utilization,
     the captured-application replay table, and the serving-load sweep."""
     from . import apps, link_utilization, sched, serving_load
 
@@ -141,7 +142,7 @@ def write_snapshot(path: str) -> None:
     serving_rows = serving_load.run(csv=False)
     gbps = relayout_gbps()
     payload = {
-        "bench": "PR6",
+        "bench": "PR7",
         "columns": {
             "relayout_gbps": ["name", "us_per_call", "gbytes_per_s"],
             "fig4sim": ["name", "simulated_us", "utilization_or_ratio"],
@@ -150,7 +151,8 @@ def write_snapshot(path: str) -> None:
             "apps": ["name", "makespan_us", "utilization_or_speedup",
                      "contention_stalls_us"],
             "serving_load": ["name", "p50_us", "tokens_per_s_or_ratio",
-                             "p99_us"],
+                             "p99_us", "ttft_p50_us", "ttft_p99_us",
+                             "tbt_p50_us", "tbt_p99_us"],
         },
         "sections": {
             "relayout_gbps": [list(r) for r in gbps],
@@ -198,7 +200,7 @@ def main() -> None:
                     help="list registered sections and exit")
     ap.add_argument("--sim", action="store_true",
                     help="simulator-only mode for sections that support it")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR6.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_PR7.json", default=None,
                     metavar="PATH", help="write the perf snapshot and exit")
     args = ap.parse_args()
     if args.list:

@@ -11,12 +11,16 @@ and CI-stable; the jitted smoke-model kernels still execute for real, so the
 tokens are real too.
 
 Rows: ``serving_load/<fabric>/rps<load>/<engine>`` = p50 latency (us) with
-tokens/s as the derived column and p99 latency (us) in the stall column;
-``.../ratio`` = continuous-over-static tokens/s — the continuous-batching
-win at that load point (static gangs waste decode width on drained rows and
-queue arrivals behind the slowest member).
+tokens/s as the derived column, p99 latency (us), then the SLO columns —
+TTFT p50/p99 and TBT p50/p99 (us, simulated clock); ``.../ratio`` =
+continuous-over-static tokens/s — the continuous-batching win at that load
+point (static gangs waste decode width on drained rows and queue arrivals
+behind the slowest member).  At the lowest offered load the sweep *asserts*
+continuous p99 TTFT <= static p99 TTFT on every fabric: first tokens must
+not queue behind a draining gang when the system is unloaded.
 
   PYTHONPATH=src python -m benchmarks.serving_load [--sim] [--csv PATH]
+                                                   [--trace PATH]
 """
 from __future__ import annotations
 
@@ -74,12 +78,26 @@ def sweep(loads: Sequence[float] = LOADS_RPS,
                 reports[eng.name] = rep
                 rows.append((f"serving_load/{fname}/rps{rate:.0f}/{eng.name}",
                              rep.p50_s * 1e6, rep.tokens_per_s,
-                             rep.p99_s * 1e6))
+                             rep.p99_s * 1e6,
+                             rep.ttft_p50_s * 1e6, rep.ttft_p99_s * 1e6,
+                             rep.tbt_p50_s * 1e6, rep.tbt_p99_s * 1e6))
             ratio = (reports["continuous"].tokens_per_s
                      / reports["static"].tokens_per_s)
             rows.append((f"serving_load/{fname}/rps{rate:.0f}/ratio",
                          reports["continuous"].p50_s * 1e6, ratio))
+            if rate == min(loads):
+                # SLO acceptance: unloaded, a first token must not queue
+                # behind a draining gang — continuous wins (or ties) p99 TTFT
+                c, s = (reports["continuous"].ttft_p99_s,
+                        reports["static"].ttft_p99_s)
+                assert c <= s + 1e-12, (
+                    f"{fname}: continuous p99 TTFT {c * 1e6:.1f}us exceeds "
+                    f"static {s * 1e6:.1f}us at low load {rate:.0f} rps")
     return rows
+
+
+CSV_HEADER = ("name,p50_us,tokens_per_s_or_ratio,p99_us,"
+              "ttft_p50_us,ttft_p99_us,tbt_p50_us,tbt_p99_us")
 
 
 def run(csv: bool = True, sim: bool = False,
@@ -89,17 +107,45 @@ def run(csv: bool = True, sim: bool = False,
     once either way)."""
     rows = sweep()
     lines = []
-    for name, us, derived, *stall in rows:
-        extra = f",{stall[0]:.1f}" if stall else ","
+    for name, us, derived, *rest in rows:
+        extra = "".join(f",{v:.1f}" for v in rest)
+        extra += "," * (5 - len(rest))             # ratio rows: pad columns
         lines.append(f"{name},{us:.1f},{derived:.4f}{extra}")
     if csv:
         for ln in lines:
             print(ln)
     if csv_path:
         with open(csv_path, "w") as f:
-            f.write("name,p50_us,tokens_per_s_or_ratio,p99_us\n")
+            f.write(CSV_HEADER + "\n")
             f.write("\n".join(lines) + "\n")
     return rows
+
+
+def export_trace(path: str) -> str:
+    """One low-load continuous run captured under a telemetry session and
+    exported as Chrome trace-event JSON (the CI ``serving.trace.json``
+    artifact): the replayed movement timeline rows plus the engine-phase and
+    chokepoint span tracks, one Perfetto-loadable file."""
+    import jax.numpy as jnp
+
+    from repro.runtime import Topology, chrometrace, telemetry
+    from repro.runtime.trace import capture
+    from repro.serving import ContinuousBatchingEngine, poisson_stream
+
+    cfg, params = _model()
+    stream = poisson_stream(cfg, N_REQUESTS, min(LOADS_RPS),
+                            prompt_lens=PROMPT_LENS, max_new=MAX_NEW, seed=1)
+    topo = Topology.host_device(2)
+    eng = ContinuousBatchingEngine(cfg, params, max_len=24, max_batch=4,
+                                   cache_dtype=jnp.float32, topology=topo)
+    with telemetry.session(name="serving_load") as tel, \
+            capture(name="serving_load") as tr:
+        eng.serve(list(stream))
+    events = (chrometrace.trace_events(tr, topo)
+              + chrometrace.telemetry_events(tel))
+    chrometrace.export(events, path)
+    print(f"# wrote {path}: {len(events)} trace events")
+    return path
 
 
 if __name__ == "__main__":
@@ -110,6 +156,11 @@ if __name__ == "__main__":
                     help="simulator-costed smoke (this section always is)")
     ap.add_argument("--csv", default=None, metavar="PATH",
                     help="also write the rows as a CSV file (CI artifact)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export one continuous run as Chrome trace-event "
+                         "JSON (open in Perfetto)")
     args = ap.parse_args()
-    print("name,us_per_call,derived,contention_stalls")
+    print(CSV_HEADER)
     run(sim=args.sim, csv_path=args.csv)
+    if args.trace:
+        export_trace(args.trace)

@@ -1,4 +1,4 @@
-"""Quickstart: the XDMA core in eleven moves.
+"""Quickstart: the XDMA core in twelve moves.
 
   PYTHONPATH=src python examples/quickstart.py
 
@@ -10,7 +10,9 @@ move 10 is the movement plane (§9) — capture a serving decode step's whole
 movement timeline and replay it on any fabric under hardware-Frontend vs
 software-AGU costing; move 11 is continuous-batching serving (§10) — a
 Poisson request stream over the paged-KV pool, with tokens/s and latency
-percentiles from the simulated timeline.
+percentiles from the simulated timeline; move 12 is the telemetry plane
+(§11) — one counter snapshot across every subsystem plus a Chrome
+trace-event export you can open in Perfetto.
 """
 import jax
 import jax.numpy as jnp
@@ -144,3 +146,26 @@ with capture(name="serve") as serve_trace:
 print(report.summary())
 print(f"page movements in the ledger: {len(serve_trace.labelled('page:'))} "
       f"(pool counted {report.pool_stats['movements']})")
+
+# 12. the telemetry plane (DESIGN.md §11): open a session around a decode
+#     step, snapshot every subsystem's counters in one call, and dump the
+#     captured timeline as Chrome trace-event JSON — open quickstart.trace.json
+#     in https://ui.perfetto.dev (or chrome://tracing) to see the link rows,
+#     the chokepoint spans, and the engine's phase spans side by side.
+from repro.runtime import chrometrace, telemetry
+
+telemetry.reset("links")
+with telemetry.session(name="quickstart") as tel, \
+        capture(name="decode-telemetry") as tl_trace:
+    eng.generate(prompt, 2)                      # the move-10 decode, observed
+    snap = telemetry.snapshot()                  # one call, every surface
+counted = {k.removeprefix("bytes:"): v
+           for k, v in snap["surfaces"]["scheduler_links"].items()
+           if k.startswith("bytes:") and v}
+print("telemetry: per-link bytes", counted,
+      "== ledger", tl_trace.per_link_bytes())
+events = (chrometrace.trace_events(tl_trace, fabric)
+          + chrometrace.telemetry_events(tel))
+chrometrace.export(events, "quickstart.trace.json")
+print(f"wrote quickstart.trace.json ({len(events)} events) — "
+      f"load it in Perfetto")

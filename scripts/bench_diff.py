@@ -1,0 +1,90 @@
+"""Diff two ``BENCH_*.json`` perf snapshots into a regression table.
+
+The snapshots ``benchmarks/run.py --json`` writes carry three ratio dicts —
+``sw_vs_frontend_ratio_d9`` (Fig. 4 per-pattern link-utilization ratios),
+``app_speedup_frontend_vs_sw`` (Fig. 11 end-to-end app speedups), and
+``continuous_over_static_tokens_ratio`` (serving throughput wins).  All
+three are *higher-is-better* ratios, so a drop between snapshots is a perf
+regression in the movement plane, independent of host noise (every ratio is
+simulator-derived).
+
+Usage::
+
+  python scripts/bench_diff.py OLD.json NEW.json [--threshold 0.10]
+
+Prints one markdown-ish row per shared key (old, new, delta %) and exits 1
+when any shared ratio regressed by more than ``--threshold`` (default 10%).
+Keys present in only one snapshot are listed but never gate — a new PR adds
+rows, it must not be failed for them.
+"""
+import argparse
+import json
+import sys
+
+RATIO_KEYS = (
+    "sw_vs_frontend_ratio_d9",
+    "app_speedup_frontend_vs_sw",
+    "continuous_over_static_tokens_ratio",
+)
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def diff(old, new, threshold):
+    """Compare the shared ratio entries; returns (rows, regressions) where
+    rows are (section, key, old, new, delta_frac) and regressions the subset
+    past the threshold."""
+    rows, regressions = [], []
+    for section in RATIO_KEYS:
+        o, n = old.get(section, {}), new.get(section, {})
+        for key in sorted(set(o) | set(n)):
+            if key not in o or key not in n:
+                rows.append((section, key, o.get(key), n.get(key), None))
+                continue
+            ov, nv = float(o[key]), float(n[key])
+            delta = (nv - ov) / ov if ov else 0.0
+            rows.append((section, key, ov, nv, delta))
+            if delta < -threshold:
+                regressions.append((section, key, ov, nv, delta))
+    return rows, regressions
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="previous snapshot (e.g. BENCH_PR6.json)")
+    ap.add_argument("new", help="current snapshot (e.g. BENCH_PR7.json)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max allowed fractional drop in any shared ratio "
+                         "(default 0.10 = 10%%)")
+    args = ap.parse_args(argv)
+    old, new = load(args.old), load(args.new)
+    rows, regressions = diff(old, new, args.threshold)
+
+    print(f"# bench diff: {old.get('bench', args.old)} -> "
+          f"{new.get('bench', args.new)} "
+          f"(threshold {args.threshold:.0%})")
+    print(f"{'section':38s} {'key':46s} {'old':>10s} {'new':>10s} "
+          f"{'delta':>8s}")
+    for section, key, ov, nv, delta in rows:
+        o = f"{ov:10.4f}" if ov is not None else "         -"
+        n = f"{nv:10.4f}" if nv is not None else "         -"
+        d = f"{delta:+8.1%}" if delta is not None else "     new" \
+            if ov is None else " removed"
+        print(f"{section:38s} {key:46s} {o} {n} {d}")
+
+    shared = sum(1 for r in rows if r[4] is not None)
+    print(f"# {shared} shared ratios, {len(regressions)} regressed past "
+          f"{args.threshold:.0%}")
+    if regressions:
+        for section, key, ov, nv, delta in regressions:
+            print(f"REGRESSION {section}/{key}: {ov:.4f} -> {nv:.4f} "
+                  f"({delta:+.1%})", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.runtime import telemetry as _tm
+
 from . import engine
 from . import plugin_compiler
 from . import plugins as P
@@ -52,19 +54,43 @@ __all__ = ["transfer", "XDMAQueue", "cache_stats", "clear_cache",
 # None.  It lives here (not in runtime/) so every chokepoint — transfer(),
 # XDMAQueue, DistributedScheduler.submit — shares one slot without an import
 # cycle; when no capture is open the cost is a single `is None` check.
+# (The telemetry session slot follows the same discipline, but lives in
+# repro.runtime.telemetry — a leaf module everything can import.)
 _CAPTURE = None
 
 
 # -- the CFG cache: descriptor -> lowered callable ---------------------------
-@dataclasses.dataclass
+# Counters live in the telemetry plane (DESIGN.md §11): one CSR-style bank
+# per domain, read through telemetry.snapshot() alongside every other
+# subsystem's counters.  cache_stats() stays as a thin view.
+_BANK = _tm.bank("cfg_cache")
+
+
 class _CacheStats:
-    hits: int = 0
-    misses: int = 0
-    evictions: int = 0
+    """View over ``telemetry.bank("cfg_cache")`` keeping the historical
+    ``cache_stats()`` attribute surface (hits/misses/evictions/size)."""
+
+    __slots__ = ()
+
+    @property
+    def hits(self):
+        return _BANK.get("hits")
+
+    @property
+    def misses(self):
+        return _BANK.get("misses")
+
+    @property
+    def evictions(self):
+        return _BANK.get("evictions")
 
     @property
     def size(self):
         return len(_CACHE)
+
+    def __repr__(self):
+        return (f"_CacheStats(hits={self.hits}, misses={self.misses}, "
+                f"evictions={self.evictions}, size={self.size})")
 
 
 # LRU: key -> (descriptor kept alive so id-keys stay unique, lowered callable).
@@ -79,7 +105,12 @@ _CAPACITY = _DEFAULT_CAPACITY
 
 
 def cache_stats() -> _CacheStats:
-    """Hit/miss/eviction counters for the per-descriptor CFG cache."""
+    """Hit/miss/eviction counters for the per-descriptor CFG cache.
+
+    .. deprecated:: PR 7
+        A thin view over ``telemetry.bank("cfg_cache")``; prefer
+        :func:`repro.runtime.telemetry.snapshot`, which reports these
+        counters alongside every other subsystem's."""
     return _STATS
 
 
@@ -101,14 +132,12 @@ def set_cache_capacity(n: int) -> None:
 def _evict_to_capacity() -> None:
     while len(_CACHE) > _CAPACITY:
         _CACHE.popitem(last=False)      # least recently used first
-        _STATS.evictions += 1
+        _BANK.inc("evictions")
 
 
 def clear_cache() -> None:
     _CACHE.clear()
-    _STATS.hits = 0
-    _STATS.misses = 0
-    _STATS.evictions = 0
+    _BANK.clear()
 
 
 def _compiled_or(desc: XDMADescriptor, interpret: bool,
@@ -226,10 +255,10 @@ def _lowered(desc: XDMADescriptor, interpret: bool) -> Callable:
     key = (desc.cache_key(), bool(interpret))
     entry = _CACHE.get(key)
     if entry is not None:
-        _STATS.hits += 1
+        _BANK.inc("hits")
         _CACHE.move_to_end(key)
         return entry[1]
-    _STATS.misses += 1
+    _BANK.inc("misses")
     fn = _lower(desc, interpret)
     _CACHE[key] = (desc, fn)
     _evict_to_capacity()
@@ -248,9 +277,18 @@ def transfer(x: jnp.ndarray, desc: XDMADescriptor, *,
     Pallas backend (kernels run in interpret mode off-TPU).
 
     When a :func:`repro.runtime.trace.capture` scope is open, every call is
-    recorded into the ambient :class:`~repro.runtime.trace.TransferTrace`.
+    recorded into the ambient :class:`~repro.runtime.trace.TransferTrace`;
+    when a :func:`repro.runtime.telemetry.session` is open, the call is
+    additionally timed as an ``xdma.transfer`` span.  Both hooks are a
+    single ``is None`` check when off.
     """
-    out = _lowered(desc, interpret)(x)
+    tel = _tm._ACTIVE
+    if tel is None:
+        out = _lowered(desc, interpret)(x)
+    else:
+        with tel.span("xdma.transfer", track="transfer",
+                      desc=desc.summary(), movement=desc.movement):
+            out = _lowered(desc, interpret)(x)
     if _CAPTURE is not None:
         _CAPTURE.record_transfer(x, desc, out)
     return out
@@ -325,7 +363,13 @@ class XDMAQueue:
 
     def run_task(self, x, i: int, *, interpret: bool = True):
         """Dispatch task ``i`` alone (in-order use is the caller's contract)."""
-        out = self._task(i, interpret)(x)
+        tel = _tm._ACTIVE
+        if tel is None:
+            out = self._task(i, interpret)(x)
+        else:
+            with tel.span("XDMAQueue.run_task", track="queue",
+                          queue=self.name, task=i):
+                out = self._task(i, interpret)(x)
         if _CAPTURE is not None:
             _CAPTURE.record_transfer(x, self._descs[i], out, source="queue",
                                      label=f"{self.name}[{i}]")
@@ -349,7 +393,13 @@ class XDMAQueue:
 
             fused = jax.jit(chain) if self.is_local else chain
             self._fused[interpret] = fused
-        out = fused(x)
+        tel = _tm._ACTIVE
+        if tel is None:
+            out = fused(x)
+        else:
+            with tel.span("XDMAQueue.run", track="queue",
+                          queue=self.name, tasks=len(self)):
+                out = fused(x)
         if _CAPTURE is not None:
             _CAPTURE.record_queue(self, x, out)
         return out

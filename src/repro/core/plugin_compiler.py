@@ -30,13 +30,14 @@ reports how many CFG phases fused vs fell back, and why.
 """
 from __future__ import annotations
 
-import collections
 import math
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.runtime import telemetry as _tm
 
 from . import layouts as L
 from . import plugins as P
@@ -47,28 +48,33 @@ __all__ = ["can_fuse", "compile_local", "compile_side", "maybe_compile_local",
 
 
 # -- fusion accounting (one event per CFG phase, not per Data phase) ---------
-_STATS = {"fused": 0, "fallback": 0}
-_REASONS: "collections.Counter[str]" = collections.Counter()
+# Counters live in telemetry.bank("plugin_compiler"); this module keeps the
+# historical view functions.
+_BANK = _tm.bank("plugin_compiler")
 
 
 def cfg_stats() -> Dict[str, Any]:
-    """Fused vs fallback CFG-phase counts, with per-reason fallback detail."""
-    return {"fused": _STATS["fused"], "fallback": _STATS["fallback"],
-            "reasons": dict(_REASONS)}
+    """Fused vs fallback CFG-phase counts, with per-reason fallback detail.
+
+    .. deprecated:: PR 7
+        Thin view over ``telemetry.bank("plugin_compiler")`` — prefer
+        :func:`repro.runtime.telemetry.snapshot`, which carries the same
+        counters under ``surfaces["cfg_stats"]``.
+    """
+    return {"fused": _BANK.get("fused"), "fallback": _BANK.get("fallback"),
+            "reasons": _BANK.with_prefix("reason:")}
 
 
 def clear_stats() -> None:
-    _STATS["fused"] = 0
-    _STATS["fallback"] = 0
-    _REASONS.clear()
+    _BANK.clear()
 
 
 def _record(fused: bool, reason: str = "") -> None:
     if fused:
-        _STATS["fused"] += 1
+        _BANK.inc("fused")
     else:
-        _STATS["fallback"] += 1
-        _REASONS[reason or "unknown"] += 1
+        _BANK.inc("fallback")
+        _BANK.inc(f"reason:{reason or 'unknown'}")
 
 
 # -- fusibility --------------------------------------------------------------

@@ -27,7 +27,6 @@ Planning (:func:`plan_relayout`) picks the burst geometry:
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import math
 from typing import Any, Dict, Optional, Tuple
@@ -37,6 +36,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import layouts as L
+from repro.runtime import telemetry as _tm
 
 __all__ = ["plan_relayout", "AGUPlan", "agu_relayout", "agu_stats",
            "clear_agu_stats", "record_fallback", "record_plan", "eff_d_buf",
@@ -52,28 +52,32 @@ def eff_d_buf(extent: int, d_buf: int) -> int:
 
 
 # -- AGU coverage accounting (one event per plan, mirrors cfg_stats) ---------
-_STATS = {"kernel": 0, "identity": 0, "fallback": 0}
-_REASONS: "collections.Counter[str]" = collections.Counter()
+# Counters live in telemetry.bank("agu"); this module keeps only the view.
+_BANK = _tm.bank("agu")
 
 
 def agu_stats() -> Dict[str, Any]:
     """How relayout requests lowered: through the generic AGU kernel, as the
-    identity stream, or via the XLA fallback (with per-reason detail)."""
-    return {"kernel": _STATS["kernel"], "identity": _STATS["identity"],
-            "fallback": _STATS["fallback"], "reasons": dict(_REASONS)}
+    identity stream, or via the XLA fallback (with per-reason detail).
+
+    .. deprecated:: PR 7
+        Thin view over ``telemetry.bank("agu")`` — prefer
+        :func:`repro.runtime.telemetry.snapshot`, which carries the same
+        counters under ``surfaces["agu_stats"]``.
+    """
+    return {"kernel": _BANK.get("kernel"), "identity": _BANK.get("identity"),
+            "fallback": _BANK.get("fallback"),
+            "reasons": _BANK.with_prefix("reason:")}
 
 
 def clear_agu_stats() -> None:
-    _STATS["kernel"] = 0
-    _STATS["identity"] = 0
-    _STATS["fallback"] = 0
-    _REASONS.clear()
+    _BANK.clear()
 
 
 def _record(kind: str, reason: str = "") -> None:
-    _STATS[kind] += 1
+    _BANK.inc(kind)
     if kind == "fallback":
-        _REASONS[reason or "unknown"] += 1
+        _BANK.inc(f"reason:{reason or 'unknown'}")
 
 
 def record_fallback(reason: str) -> None:

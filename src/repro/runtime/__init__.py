@@ -1,6 +1,6 @@
 """repro.runtime — the distributed XDMA runtime (DESIGN.md §6).
 
-Three layers, mirroring the paper's distributed Controller:
+Five layers, mirroring the paper's distributed Controller:
 
 * :mod:`~repro.runtime.topology` — the link fabric (nodes = device memories,
   edges = links with a bandwidth/latency/width cost model), with TPU-mesh,
@@ -15,11 +15,47 @@ Three layers, mirroring the paper's distributed Controller:
   §9): ``capture()`` records every task issued through the plane's
   chokepoints into a :class:`~repro.runtime.trace.TransferTrace`, and
   ``replay()`` simulates the whole application timeline on any topology
-  under hardware-Frontend vs software-AGU costing.
+  under hardware-Frontend vs software-AGU costing;
+* :mod:`~repro.runtime.telemetry` + :mod:`~repro.runtime.chrometrace` —
+  the observability plane (DESIGN.md §11): CSR-style counter banks behind
+  every stats surface, span-based timing sessions, one
+  ``telemetry.snapshot()``, and Chrome trace-event JSON export of any
+  replay or session for Perfetto.
+
+This ``__init__`` resolves its exports lazily (PEP 562): low-level modules
+(``repro.core.api``, ``repro.kernels.agu``) import the leaf
+:mod:`~repro.runtime.telemetry` through the package without dragging in —
+or cycling through — the scheduler/trace stack.
 """
-from .topology import Link, Topology  # noqa: F401
-from .simulator import (  # noqa: F401
-    SimReport, SimTask, Span, queue_sim_tasks, serialize, simulate,
-)
-from .scheduler import DistributedScheduler, XDMAFuture  # noqa: F401
-from .trace import TraceEvent, TransferTrace, capture, replay  # noqa: F401
+import importlib
+
+# public name -> submodule that defines it
+_EXPORTS = {
+    "Link": "topology", "Topology": "topology",
+    "SimReport": "simulator", "SimTask": "simulator", "Span": "simulator",
+    "queue_sim_tasks": "simulator", "serialize": "simulator",
+    "simulate": "simulator",
+    "DistributedScheduler": "scheduler", "XDMAFuture": "scheduler",
+    "TraceEvent": "trace", "TransferTrace": "trace", "capture": "trace",
+    "replay": "trace",
+    "CounterBank": "telemetry", "Telemetry": "telemetry",
+}
+_SUBMODULES = ("topology", "simulator", "scheduler", "trace", "telemetry",
+               "chrometrace")
+
+__all__ = sorted(_EXPORTS) + list(_SUBMODULES)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        module = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        value = getattr(module, name)
+        globals()[name] = value          # cache: next access skips __getattr__
+        return value
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

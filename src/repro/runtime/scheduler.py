@@ -39,10 +39,18 @@ import jax
 from repro.core import api as _api
 from repro.core.descriptor import XDMADescriptor
 
+from . import telemetry as _tm
 from .simulator import SimReport, SimTask, simulate
 from .topology import Topology
 
 __all__ = ["XDMAFuture", "DistributedScheduler"]
+
+# CSR-style counter banks (DESIGN.md §11): per-link byte/burst/stall tallies
+# and per-resource queue-occupancy high-water marks.  Always counting — the
+# increments are dict adds, same cost class as the old ad-hoc stats — while
+# span timing stays gated on an active telemetry session.
+_LINKS = _tm.bank("links")
+_QUEUES = _tm.bank("queues")
 
 # Batched-round programs, shared by every scheduler instance: keyed by the
 # round's descriptor identities (same scheme as the CFG cache), so a fresh
@@ -159,6 +167,9 @@ class DistributedScheduler:
         self._fifos.setdefault(task.resource, [])
         self._heads.setdefault(task.resource, 0)
         self._fifos[task.resource].append(task.id)
+        _QUEUES.record_max(f"occupancy_hw:{task.resource}",
+                           len(self._fifos[task.resource])
+                           - self._heads[task.resource])
         return XDMAFuture(self, task.id)
 
     def _dep_events(self, deps: Tuple[int, ...]) -> Tuple[int, ...]:
@@ -186,6 +197,15 @@ class DistributedScheduler:
         task producing it; ``deps`` adds ordering-only dependency tokens.
         ``link`` pins the task to a named link (round-robin otherwise).
         """
+        tel = _tm._ACTIVE
+        if tel is None:
+            return self._submit(x, desc, link, deps, nbytes, label)
+        with tel.span("DistributedScheduler.submit", track="scheduler",
+                      desc=desc.summary() if isinstance(desc, XDMADescriptor)
+                      else repr(desc)):
+            return self._submit(x, desc, link, deps, nbytes, label)
+
+    def _submit(self, x, desc, link, deps, nbytes, label) -> XDMAFuture:
         if not isinstance(desc, XDMADescriptor):
             raise TypeError(f"submit takes a descriptor, got {type(desc)}")
         tid = self._next_id
@@ -208,6 +228,18 @@ class DistributedScheduler:
                        cost_s: float = 0.0, label: str = "") -> XDMAFuture:
         """Enqueue interleaved compute on a named engine (in-order per
         engine).  ``cost_s`` is its duration in the simulated timeline."""
+        tel = _tm._ACTIVE
+        if tel is None:
+            return self._submit_compute(fn, inputs, resource, deps, cost_s,
+                                        label)
+        with tel.span("DistributedScheduler.submit_compute",
+                      track="scheduler", resource=resource,
+                      label=label or getattr(fn, "__name__", "compute")):
+            return self._submit_compute(fn, inputs, resource, deps, cost_s,
+                                        label)
+
+    def _submit_compute(self, fn, inputs, resource, deps, cost_s,
+                        label) -> XDMAFuture:
         if resource in self.topology:
             raise ValueError(f"{resource!r} is a link; compute engines must "
                              "use a non-link resource name")
@@ -241,6 +273,10 @@ class DistributedScheduler:
             t = self._tasks[q[i]]
             if all(self._tasks[d].done for d in t.deps):
                 ready.append(t)
+            else:
+                # head task blocked on a dependency while its resource idles:
+                # one stall round on this resource
+                _LINKS.inc(f"stall_rounds:{res}")
         return ready
 
     @staticmethod
@@ -302,10 +338,37 @@ class DistributedScheduler:
                                  burst_bytes=t.burst_bytes,
                                  value=inputs[i])
                 t.trace.register_value(t.event, t.value)
+            if t.kind == "xdma":
+                self._count_dispatch(t)
             t.done = True
             t.round = self._rounds
             self._heads[t.resource] += 1
         self._rounds += 1
+
+    def _count_dispatch(self, t: _Task) -> None:
+        """Per-link CSR counters for one finalized dispatch: payload bytes
+        (exactly the ledger's ``per_link_bytes`` contribution), wire bytes,
+        generated bursts, and the amortized address-issue overhead the cost
+        model charges (``bursts * burst_overhead / d_buf``)."""
+        res = t.resource
+        nbytes = int(t.nbytes or 0)
+        _LINKS.inc(f"tasks:{res}")
+        _LINKS.inc(f"bytes:{res}", nbytes)
+        wire = (int(t.event.wire_nbytes)
+                if t.event is not None and t.event.wire_nbytes is not None
+                else nbytes)
+        _LINKS.inc(f"wire_bytes:{res}", wire)
+        if t.burst_bytes and nbytes > 0:
+            n_bursts = -(-nbytes // int(t.burst_bytes))
+        else:
+            n_bursts = 1 if nbytes > 0 else 0
+        _LINKS.inc(f"bursts:{res}", n_bursts)
+        if res in self.topology and n_bursts and t.burst_bytes:
+            link = self.topology.link(res)
+            depth = t.desc.d_buf if t.desc is not None else 1
+            _LINKS.inc(f"issue_ns:{res}",
+                       int(round(n_bursts * link.burst_overhead * 1e9
+                                 / max(1, int(depth)))))
 
     def step(self) -> bool:
         """Run one scheduling round; returns False when nothing is pending."""
@@ -343,7 +406,14 @@ class DistributedScheduler:
         return out
 
     def report(self) -> SimReport:
-        """Deterministic replay of everything dispatched so far."""
+        """Deterministic replay of everything dispatched so far.
+
+        .. deprecated:: PR 7
+            The per-link byte/burst/stall totals this replay derives are
+            mirrored live in ``telemetry.bank("links")`` and surface as
+            ``snapshot()["surfaces"]["scheduler_links"]``; keep ``report()``
+            for the full timeline (spans, utilization, makespan).
+        """
         return simulate(self.sim_tasks(), self.topology)
 
     def makespan(self) -> float:

@@ -41,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
-from repro.runtime import DistributedScheduler
+from repro.runtime import DistributedScheduler, telemetry as _tm
 from repro.serving.paged import (PagedKVPool, default_serving_topology,
                                  pages_for_rows, DEFAULT_PAGE_ROWS)
 from repro.serving.requests import Request
@@ -49,6 +49,10 @@ from repro.serving.requests import Request
 __all__ = ["ContinuousBatchingEngine", "StaticBatchEngine", "ServeReport"]
 
 HW_FLOPS = 50e12                # matches the MoE capacity-planner's engine
+
+# Serving SLO counters (DESIGN.md §11): queue-depth high-water, preemption
+# and step tallies — always counting, like every CSR bank.
+_SERVING = _tm.bank("serving")
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +162,9 @@ class _ReqState:
     generated: List[int] = dataclasses.field(default_factory=list)
     pages: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
     finish_s: float = -1.0
+    # simulated-clock stamp of every generated token (SLO metrics: TTFT is
+    # token_times[0] - arrival, TBT the successive differences)
+    token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def done_tokens(self) -> bool:
@@ -180,12 +187,19 @@ class ServeReport:
     preemptions: int
     pool_stats: Dict[str, int]
     tokens: Dict[int, np.ndarray]
+    # SLO latency aggregates on the simulated clock: time-to-first-token and
+    # time-between-tokens percentiles over completed requests
+    ttft_p50_s: float = 0.0
+    ttft_p99_s: float = 0.0
+    tbt_p50_s: float = 0.0
+    tbt_p99_s: float = 0.0
 
     def summary(self) -> str:
         return (f"{self.engine}: {self.n_requests} reqs, "
                 f"{self.total_tokens} toks in {self.elapsed_s * 1e6:.1f}us "
                 f"-> {self.tokens_per_s:,.0f} tok/s, "
                 f"p50 {self.p50_s * 1e6:.1f}us p99 {self.p99_s * 1e6:.1f}us, "
+                f"ttft p99 {self.ttft_p99_s * 1e6:.1f}us, "
                 f"{self.preemptions} preemptions")
 
 
@@ -387,6 +401,17 @@ class ContinuousBatchingEngine:
     def _gang_done(self, active) -> bool:     # continuous: free immediately
         return False
 
+    def _mark(self, tel, sched, t0, cursor, name):
+        """Close one engine phase on the simulated clock: the span runs from
+        ``cursor`` to ``t0 + makespan-so-far`` (everything submitted up to
+        this point).  Only called with an active telemetry session —
+        ``makespan()`` is a full replay, so the disabled path never pays it."""
+        now = t0 + sched.makespan()
+        if now > cursor:
+            tel.add_span(f"engine.{name}", cursor, now, track="engine",
+                         step=self.steps, engine=self.name)
+        return max(cursor, now)
+
     # -- the serving loop ----------------------------------------------------
     def serve(self, requests: Sequence[Request], *,
               max_steps: int = 10_000) -> ServeReport:
@@ -403,6 +428,7 @@ class ContinuousBatchingEngine:
         clock = 0.0
         self.steps = 0
         self.preemptions = 0
+        tel = _tm.active()
 
         while (queue or active or preempted) and self.steps < max_steps:
             if not active and not preempted and queue \
@@ -411,11 +437,16 @@ class ContinuousBatchingEngine:
             sched = DistributedScheduler(self.topology, name="serving-cb")
             self.last_scheduler = sched
             self.pool.bind(sched)
+            _SERVING.inc("steps")
+            _SERVING.record_max("queue_depth_hw", len(queue))
+            cursor = clock                         # engine-phase span cursor
 
             restored, admitted = self._admit(active, preempted, queue, clock)
             if restored:
                 sched.flush()
                 self.pool.commit()                 # restored pages land now
+            if tel is not None:
+                cursor = self._mark(tel, sched, clock, cursor, "admission")
 
             # prefill new admissions, grouped by prompt length so one jitted
             # program covers each group (and a gang of equal prompts runs the
@@ -443,6 +474,8 @@ class ContinuousBatchingEngine:
             if admitted:
                 sched.flush()
                 self.pool.commit()
+            if tel is not None:
+                cursor = self._mark(tel, sched, clock, cursor, "prefill")
 
             if not active:
                 self.steps += 1
@@ -462,15 +495,20 @@ class ContinuousBatchingEngine:
                 preempted.append(victim)
                 preempted.sort(key=lambda s: s.req.arrival_s)
                 self.preemptions += 1
+                _SERVING.inc("preemptions")
                 sched.flush()
                 self.pool.commit()                 # slots free for the rest
                 decoding = [st for st in active if not st.done_tokens
                             or self._gang_member(st)]
                 growth = sum(self._growth(st.pos) for st in decoding)
+            if tel is not None:
+                cursor = self._mark(tel, sched, clock, cursor, "preempt")
 
             # gather -> compose -> decode -> scatter dirty pages
             gathered = [self._gather(st) for st in active]
             sched.flush()
+            if tel is not None:
+                cursor = self._mark(tel, sched, clock, cursor, "gather")
             cache = self._compose_cache(active, gathered)
             toks = jnp.asarray([[st.generated[-1]] for st in active],
                                jnp.int32)
@@ -479,6 +517,8 @@ class ContinuousBatchingEngine:
             cost = 2.0 * self._n_params * len(active) / HW_FLOPS
             cfut = sched.submit_compute(lambda *a: None, *gfuts, cost_s=cost,
                                         label="compute:decode")
+            if tel is not None:
+                cursor = self._mark(tel, sched, clock, cursor, "decode")
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
             for i, (st, c1) in enumerate(
                     zip(active, self._split_cache(cache, len(active)))):
@@ -490,13 +530,31 @@ class ContinuousBatchingEngine:
                               label="decode")
             sched.flush()
             self.pool.commit()
+            if tel is not None:
+                cursor = self._mark(tel, sched, clock, cursor, "scatter")
             if self.auto_defrag and self.pool.fragmentation():
                 self.pool.defrag()
                 sched.flush()
                 self.pool.commit()
+                if tel is not None:
+                    cursor = self._mark(tel, sched, clock, cursor, "defrag")
 
             clock += sched.makespan()
             self.steps += 1
+
+            # stamp every token generated this step at the post-step clock
+            # (prefill's first token and decode's next token both land when
+            # the step's movement drains — the simulated-clock SLO base)
+            for st in states.values():
+                while len(st.token_times) < len(st.generated):
+                    st.token_times.append(clock)
+                    if tel is not None:
+                        if len(st.token_times) == 1:
+                            tel.record_value(
+                                "ttft_s", clock - st.req.arrival_s)
+                        else:
+                            tel.record_value(
+                                "tbt_s", clock - st.token_times[-2])
 
             # completions: continuous frees a request the step it drains;
             # a static gang keeps its finished rows resident (finish time
@@ -533,6 +591,15 @@ class ContinuousBatchingEngine:
         lats = np.asarray([st.finish_s - st.req.arrival_s for st in done]) \
             if done else np.asarray([0.0])
         total = sum(len(st.generated) for st in done)
+        ttfts = np.asarray([st.token_times[0] - st.req.arrival_s
+                            for st in done if st.token_times]) \
+            if done else np.asarray([])
+        tbts = np.asarray([b - a for st in done
+                           for a, b in zip(st.token_times, st.token_times[1:])])
+        if ttfts.size == 0:
+            ttfts = np.asarray([0.0])
+        if tbts.size == 0:
+            tbts = np.asarray([0.0])
         return ServeReport(
             engine=self.name, n_requests=len(done), total_tokens=total,
             elapsed_s=clock, tokens_per_s=total / clock if clock else 0.0,
@@ -541,7 +608,11 @@ class ContinuousBatchingEngine:
             steps=self.steps, preemptions=self.preemptions,
             pool_stats=dict(self.pool.stats),
             tokens={st.req.rid: np.asarray(st.generated, np.int32)
-                    for st in done})
+                    for st in done},
+            ttft_p50_s=float(np.percentile(ttfts, 50)),
+            ttft_p99_s=float(np.percentile(ttfts, 99)),
+            tbt_p50_s=float(np.percentile(tbts, 50)),
+            tbt_p99_s=float(np.percentile(tbts, 99)))
 
 
 class StaticBatchEngine(ContinuousBatchingEngine):

@@ -32,7 +32,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core.descriptor import page_descriptor
-from repro.runtime import Topology
+from repro.runtime import Topology, telemetry as _tm
 
 __all__ = ["Page", "PagedKVPool", "default_serving_topology",
            "paginate", "depaginate", "pages_for_rows", "DEFAULT_PAGE_ROWS"]
@@ -117,8 +117,24 @@ class PagedKVPool:
         self._lane = 0
         # (page, future, new_location, new_slot) landed by commit()
         self._pending: List[Tuple[Page, Any, str, int]] = []
-        self.stats = {"stores": 0, "loads": 0, "evictions": 0, "restores": 0,
-                      "defrag_moves": 0, "movements": 0, "peak_used": 0}
+        # Per-instance CSR bank, registered so telemetry.snapshot() lists it
+        # under surfaces["pool_stats"][f"pool:{name}"] (DESIGN.md §11).
+        self._bank = _tm.CounterBank(f"pool:{name}")
+        _tm.register(self._bank)
+
+    _STAT_KEYS = ("stores", "loads", "evictions", "restores",
+                  "defrag_moves", "movements", "peak_used")
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Per-op movement counters as a plain dict.
+
+        .. deprecated:: PR 7
+            Thin view over ``telemetry.bank(f"pool:{name}")`` — prefer
+            :func:`repro.runtime.telemetry.snapshot`, which carries the same
+            counters under ``surfaces["pool_stats"]``.
+        """
+        return {k: self._bank.get(k) for k in self._STAT_KEYS}
 
     # -- scheduler binding ---------------------------------------------------
     def bind(self, scheduler) -> None:
@@ -148,7 +164,7 @@ class PagedKVPool:
         exactly."""
         fut = self._require_sched().submit(data, desc, link=self._link(kind),
                                            deps=deps, label=label)
-        self.stats["movements"] += 1
+        self._bank.inc("movements")
         return fut
 
     # -- queries -------------------------------------------------------------
@@ -185,7 +201,7 @@ class PagedKVPool:
         self._next_pid += 1
         self._pages[pid] = Page(pid, slot, self.page_rows, int(cols),
                                 str(dtype_name))
-        self.stats["peak_used"] = max(self.stats["peak_used"], self.used_pages)
+        self._bank.record_max("peak_used", self.used_pages)
         return pid
 
     def store(self, pid: int, mat, *, deps=(), label: str = "store"):
@@ -198,7 +214,7 @@ class PagedKVPool:
         fut = self._submit(mat, desc, kind="out", deps=deps,
                            label=f"page:{pid}:{label}")
         self._pending.append((p, fut, "dev", p.slot))
-        self.stats["stores"] += 1
+        self._bank.inc("stores")
         return fut
 
     def load(self, pid: int, *, deps=()):
@@ -208,7 +224,7 @@ class PagedKVPool:
         if p.location != "dev":
             raise ValueError(f"page {pid} is host-resident; restore it first")
         desc = page_descriptor(p.rows, p.cols, p.dtype, direction="load")
-        self.stats["loads"] += 1
+        self._bank.inc("loads")
         return self._submit(p.data, desc, kind="in", deps=deps,
                             label=f"page:{pid}:load")
 
@@ -223,7 +239,7 @@ class PagedKVPool:
         fut = self._submit(p.data, desc, kind="in", deps=deps,
                            label=f"page:{pid}:evict")
         self._pending.append((p, fut, "host", -1))
-        self.stats["evictions"] += 1
+        self._bank.inc("evictions")
         return fut
 
     def restore(self, pid: int, *, deps=()):
@@ -240,8 +256,8 @@ class PagedKVPool:
         fut = self._submit(p.data, desc, kind="out", deps=deps,
                            label=f"page:{pid}:restore")
         self._pending.append((p, fut, "dev", slot))
-        self.stats["restores"] += 1
-        self.stats["peak_used"] = max(self.stats["peak_used"], self.used_pages)
+        self._bank.inc("restores")
+        self._bank.record_max("peak_used", self.used_pages)
         return fut
 
     def free(self, pid: int) -> None:
@@ -275,7 +291,7 @@ class PagedKVPool:
             self._free_slots.sort()
             # record the move eagerly so the loop sees the new slot map
             hi.slot = lo
-            self.stats["defrag_moves"] += 1
+            self._bank.inc("defrag_moves")
             moves += 1
         return moves
 
