@@ -17,16 +17,17 @@ In a full ``--sim`` sweep, sections with no simulator mode are *skipped* (a
 smoke run must stay cheap); ``--only SECTION --sim`` still runs that section
 for real if it has no sim mode.
 
-``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR7.json``):
+``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR8.json``):
 measured relayout GB/s through the fused and generic-AGU Pallas backends,
 the simulated Fig. 4 per-link utilization sweep with the software-AGU vs
 Frontend ratio per traffic pattern, the scheduler rows with their contention
-stalls, the ``apps`` section — captured serving/MoE/train application
-traces replayed on multiple fabrics under Frontend vs software-AGU costing
-(the paper's Fig. 11 end-to-end speedups, from ``benchmarks/apps.py``) —
-and the ``serving_load`` sweep (continuous vs static batching tokens/s and
-latency percentiles vs offered load, from ``benchmarks/serving_load.py``).
-The snapshot is committed into the repo (``BENCH_PR7.json``) so the bench
+stalls (now including the ring plane's fairness/overload sweep), the
+``apps`` section — captured serving/MoE/train application traces replayed
+on multiple fabrics under Frontend vs software-AGU costing (the paper's
+Fig. 11 end-to-end speedups, from ``benchmarks/apps.py``) — and the
+``serving_load`` sweep (continuous vs static batching tokens/s and latency
+percentiles vs offered load, from ``benchmarks/serving_load.py``).
+The snapshot is committed into the repo (``BENCH_PR8.json``) so the bench
 trajectory diffs PR over PR; CI also uploads it as an artifact and diffs it
 against the previous snapshot with ``scripts/bench_diff.py``.
 """
@@ -121,8 +122,9 @@ def _cached_apps_rows(csv_path: str):
 
 
 def write_snapshot(path: str) -> None:
-    """The BENCH_PR7 perf snapshot: relayout GB/s, simulated utilization,
-    the captured-application replay table, and the serving-load sweep."""
+    """The BENCH_PR8 perf snapshot: relayout GB/s, simulated utilization,
+    the captured-application replay table, the serving-load sweep, and the
+    ring plane's fairness/overload rollup."""
     from . import apps, link_utilization, sched, serving_load
 
     import os
@@ -142,7 +144,7 @@ def write_snapshot(path: str) -> None:
     serving_rows = serving_load.run(csv=False)
     gbps = relayout_gbps()
     payload = {
-        "bench": "PR7",
+        "bench": "PR8",
         "columns": {
             "relayout_gbps": ["name", "us_per_call", "gbytes_per_s"],
             "fig4sim": ["name", "simulated_us", "utilization_or_ratio"],
@@ -180,6 +182,13 @@ def write_snapshot(path: str) -> None:
         "continuous_over_static_tokens_ratio": {
             r[0]: r[2] for r in serving_rows if r[0].endswith("/ratio")
         },
+        # the ring plane's fairness axis (DESIGN.md §12): the starved
+        # tenant's achieved bandwidth share under 10x adversarial overload,
+        # through a shared ring vs per-tenant rings (fair share = 0.5)
+        "ring_fairness": {
+            r[0]: r[2] for r in sched_rows
+            if r[0].startswith("sched/overload/")
+        },
         "apps_rows_source": apps_source,
     }
     with open(path, "w") as f:
@@ -188,7 +197,7 @@ def write_snapshot(path: str) -> None:
           f"{len(payload['sw_vs_frontend_ratio_d9'])} fig4 ratios, "
           f"{len(payload['app_speedup_frontend_vs_sw'])} app speedups, "
           f"{len(payload['continuous_over_static_tokens_ratio'])} serving "
-          "ratios")
+          f"ratios, {len(payload['ring_fairness'])} fairness rows")
 
 
 def main() -> None:
@@ -200,7 +209,7 @@ def main() -> None:
                     help="list registered sections and exit")
     ap.add_argument("--sim", action="store_true",
                     help="simulator-only mode for sections that support it")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR7.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_PR8.json", default=None,
                     metavar="PATH", help="write the perf snapshot and exit")
     args = ap.parse_args()
     if args.list:

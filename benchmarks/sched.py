@@ -22,6 +22,16 @@ mean per-link utilization as the derived column and the simulator's
 ``contention_stall`` (us; data ready, link busy) as the fourth column —
 previously computed but dropped from the artifact; ``.../speedup`` = serial
 over distributed makespan.
+
+The overload sweep (``sched/overload/...``) is the ring plane's fairness
+benchmark: one adversarial tenant posts 10x the other's descriptors onto one
+link, once through a single shared ring and once through per-tenant rings
+with round-robin credit arbitration.  ``light_share`` is the starved
+tenant's achieved fraction of link bandwidth until its last transfer drains
+(fair = 0.5 on two tenants); ``fair_gain`` = per-tenant over shared share.
+These rows run in both modes — the dispatches are real 512x512 identity
+relayouts (cheap, one cached program) and the shares come from the
+deterministic replay, so --sim changes nothing.
 """
 from __future__ import annotations
 
@@ -116,6 +126,46 @@ def _execute(items, topo: Topology):
     return t_dist, t_serial
 
 
+HEAVY_TASKS = 40                 # the adversarial tenant's descriptor count
+LIGHT_TASKS = 4                  # the starved tenant's
+OVERLOAD_SHAPE = (512, 512)      # per-transfer payload (f32: 1MiB each way)
+
+
+def _light_share(per_tenant: bool) -> float:
+    """The starved tenant's achieved bandwidth share on one overloaded link:
+    light's total bytes over (time until light's last transfer drains) *
+    link bandwidth.  ``per_tenant=False`` lands both tenants in one shared
+    ring (tenant ``""``), which is the starvation baseline."""
+    import jax.numpy as jnp
+    from repro import core as C
+
+    topo = Topology.parallel(1)
+    sched = DistributedScheduler(topo)
+    x = jnp.zeros(OVERLOAD_SHAPE, jnp.float32)
+    desc = C.describe("MN", "MN")
+    heavy_t = "heavy" if per_tenant else ""
+    light_t = "light" if per_tenant else ""
+    light_futs = []
+    for _ in range(HEAVY_TASKS):                 # adversary floods first
+        sched.submit(x, desc, link="link0", tenant=heavy_t, label="heavy")
+    for _ in range(LIGHT_TASKS):
+        light_futs.append(sched.submit(x, desc, link="link0",
+                                       tenant=light_t, label="light"))
+    sched.flush()
+    rep = sched.report()
+    light_end = max(rep.span_of(f.task_id).end for f in light_futs)
+    light_bytes = sum(sched._tasks[f.task_id].nbytes for f in light_futs)
+    return light_bytes / (light_end * topo.link("link0").bandwidth)
+
+
+def _overload_rows():
+    shared = _light_share(per_tenant=False)
+    tenant = _light_share(per_tenant=True)
+    return [("sched/overload/shared/light_share", shared * 1e2, shared),
+            ("sched/overload/tenant/light_share", tenant * 1e2, tenant),
+            ("sched/overload/fair_gain", tenant * 1e2, tenant / shared)]
+
+
 def run(csv: bool = True, sim: bool = False):
     rows = []
     for workload in ("indep", "pipeline", "mixed"):
@@ -139,6 +189,7 @@ def run(csv: bool = True, sim: bool = False):
                 rows.append((f"{tag}/wall_dist", t_dist * 1e6,
                              t_serial / t_dist))
                 rows.append((f"{tag}/wall_serial", t_serial * 1e6, 1.0))
+    rows += _overload_rows()
     if csv:
         for name, us, derived, *stall in rows:
             extra = f",{stall[0]:.2f}" if stall else ","

@@ -135,9 +135,18 @@ def _evict_to_capacity() -> None:
         _BANK.inc("evictions")
 
 
+# Sibling caches holding compositions of the lowerings above (e.g. the
+# scheduler's batched-round programs).  They register here so clear_cache()
+# cannot leave a stale composition that silently bypasses a freshly cleared
+# CFG cache.
+_AUX_CACHES: List["collections.OrderedDict"] = []
+
+
 def clear_cache() -> None:
     _CACHE.clear()
     _BANK.clear()
+    for aux in _AUX_CACHES:
+        aux.clear()
 
 
 def _compiled_or(desc: XDMADescriptor, interpret: bool,
@@ -403,6 +412,33 @@ class XDMAQueue:
         if _CAPTURE is not None:
             _CAPTURE.record_queue(self, x, out)
         return out
+
+    def submit_to(self, sched, x, *, link=None, tenant: str = "",
+                  deps: Sequence = ()):
+        """Post the whole queue through a scheduler's descriptor rings: one
+        ring post (doorbell) per task, chained in order — the async analogue
+        of :meth:`run`, value-identical to it because both sides dispatch
+        through the same per-descriptor cached lowering.
+
+        ``link=None`` routes the *first* task by the scheduler's round-robin
+        policy and pins the rest of the chain to the same link, preserving
+        the in-order single-FIFO semantics of :meth:`run`.  Returns the
+        final task's :class:`~repro.runtime.scheduler.XDMAFuture`.
+        """
+        if not self._descs:
+            raise ValueError(f"XDMAQueue {self.name!r} is empty: nothing to "
+                             "submit")
+        fut = None
+        for i, d in enumerate(self._descs):
+            fut = sched.submit(x if fut is None else fut, d, link=link,
+                               deps=tuple(deps) if fut is None else (),
+                               tenant=tenant, label=f"{self.name}[{i}]")
+            if link is None:
+                # pin the rest of the chain to the routed link: a chain
+                # scattered round-robin would serialize on deps anyway but
+                # misreport per-link traffic
+                link = sched._tasks[fut.task_id].resource
+        return fut
 
     def summary(self) -> str:
         lines = [f"XDMAQueue({self.name!r}, {len(self)} tasks)"]

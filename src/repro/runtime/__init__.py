@@ -5,9 +5,11 @@ Five layers, mirroring the paper's distributed Controller:
 * :mod:`~repro.runtime.topology` — the link fabric (nodes = device memories,
   edges = links with a bandwidth/latency/width cost model), with TPU-mesh,
   ring, host-device, and parallel-lane presets;
-* :mod:`~repro.runtime.scheduler` — async dispatch: ``submit`` routes
-  descriptors to per-link in-order FIFOs, returns :class:`XDMAFuture` tokens,
-  and drains ready tasks on distinct links together in batched rounds;
+* :mod:`~repro.runtime.scheduler` + :mod:`~repro.runtime.ring` — async
+  dispatch: ``submit`` posts descriptors into fixed-depth per-(link, tenant)
+  rings (doorbell CSR writes, credit-based backpressure — DESIGN.md §12),
+  returns :class:`XDMAFuture` tokens, and drains ready ring heads on
+  distinct links together in batched rounds, feeding a completion queue;
 * :mod:`~repro.runtime.simulator` — deterministic event-driven replay of any
   schedule against a topology: per-link utilization, contention stalls,
   makespan (Fig. 4 numbers without host-timing noise);
@@ -36,12 +38,13 @@ _EXPORTS = {
     "queue_sim_tasks": "simulator", "serialize": "simulator",
     "simulate": "simulator",
     "DistributedScheduler": "scheduler", "XDMAFuture": "scheduler",
+    "DescriptorRing": "ring", "WouldBlock": "ring", "Completion": "ring",
     "TraceEvent": "trace", "TransferTrace": "trace", "capture": "trace",
     "replay": "trace",
     "CounterBank": "telemetry", "Telemetry": "telemetry",
 }
-_SUBMODULES = ("topology", "simulator", "scheduler", "trace", "telemetry",
-               "chrometrace")
+_SUBMODULES = ("topology", "ring", "simulator", "scheduler", "trace",
+               "telemetry", "chrometrace")
 
 __all__ = sorted(_EXPORTS) + list(_SUBMODULES)
 

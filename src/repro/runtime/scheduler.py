@@ -1,27 +1,40 @@
-"""Async XDMA dispatch: per-link in-order FIFOs, futures, batched rounds.
+"""Async XDMA dispatch: per-link descriptor rings, futures, batched rounds.
 
-Paper §II-B gives each *link* its own Controller task FIFO: tasks on one link
-dispatch strictly in order, tasks on different links dispatch concurrently.
-:class:`DistributedScheduler` is that Controller distributed across a
-:class:`~repro.runtime.topology.Topology`:
+Paper §II-B gives each *link* its own Controller task queue: tasks on one
+link dispatch strictly in order, tasks on different links dispatch
+concurrently.  :class:`DistributedScheduler` is that Controller distributed
+across a :class:`~repro.runtime.topology.Topology`, with the production
+submission shape (DESIGN.md §12): fixed-depth **descriptor rings** instead
+of unbounded FIFOs.
 
-* ``submit(x, desc, link=..., deps=...)`` routes one descriptor to a per-link
-  FIFO and returns an :class:`XDMAFuture` immediately — the token other tasks
-  name as a dependency (the CFG phase stays compile-time: lowering reuses the
-  per-descriptor cache in :mod:`repro.core.api`).
+* ``submit(x, desc, link=..., deps=..., tenant=...)`` posts one descriptor
+  into a per-(link, tenant) :class:`~repro.runtime.ring.DescriptorRing` and
+  rings its doorbell — the CSR write the simulator prices via
+  ``Link.csr_write_cost``, separately from the data transfer.  It returns an
+  :class:`XDMAFuture` immediately — the token other tasks name as a
+  dependency (the CFG phase stays compile-time: lowering reuses the
+  per-descriptor cache in :mod:`repro.core.api`).  A post consumes a ring
+  *credit*; when the ring is full, the ``block`` policy (default) drains
+  scheduling rounds until a completion returns one, and the ``error`` policy
+  raises :class:`~repro.runtime.ring.WouldBlock` for the caller to handle.
 * ``submit_compute(fn, ...)`` enqueues interleaved compute (expert FFN, host
   preprocessing) on a named compute engine so transfer/compute overlap is
   visible to the simulator.
-* ``flush()`` drains the FIFOs in *scheduling rounds*: each round takes the
-  ready head task of every resource and dispatches them together — local
-  concrete-array tasks are fused into one batched XLA program per round
-  (cached by the tuple of descriptor identities), everything else dispatches
-  through exactly the same cached lowering ``xdma.transfer`` uses, so results
-  are bit-identical to a serial replay of the same descriptors.
+* ``flush()`` drains the rings in *scheduling rounds*: each round takes one
+  ready ring head per resource — round-robin over that resource's tenant
+  rings, which is what keeps a starved tenant near its fair share under
+  adversarial load — and dispatches them together.  Local concrete-array
+  tasks are fused into one batched XLA program per round (cached by the
+  tuple of descriptor identities), everything else dispatches through
+  exactly the same cached lowering ``xdma.transfer`` uses, so results are
+  bit-identical to a serial replay of the same descriptors.
 
-Every dispatch is recorded; ``sim_tasks()`` / ``report()`` replay the
-schedule through :mod:`repro.runtime.simulator` for deterministic per-link
-utilization and makespan numbers (ISSUE Fig. 4 without host-timing noise).
+Every dispatch retires its ring head into a completion queue
+(``scheduler.completions``) carrying the simulated span — which resolves
+futures, returns the credit, and keeps an *incremental* makespan that is
+bit-equal to the full event-driven replay once the rings are drained.
+``sim_tasks()`` / ``report()`` still replay the schedule through
+:mod:`repro.runtime.simulator` for the full timeline.
 
 The scheduler is trace-transparent: submitting tracers (inside ``shard_map``
 or ``jit``) simply threads the symbolic values through the same round
@@ -40,17 +53,20 @@ from repro.core import api as _api
 from repro.core.descriptor import XDMADescriptor
 
 from . import telemetry as _tm
+from .ring import DEFAULT_RING_DEPTH, Completion, DescriptorRing, WouldBlock
 from .simulator import SimReport, SimTask, simulate
 from .topology import Topology
 
 __all__ = ["XDMAFuture", "DistributedScheduler"]
 
-# CSR-style counter banks (DESIGN.md §11): per-link byte/burst/stall tallies
-# and per-resource queue-occupancy high-water marks.  Always counting — the
-# increments are dict adds, same cost class as the old ad-hoc stats — while
-# span timing stays gated on an active telemetry session.
+# CSR-style counter banks (DESIGN.md §11): per-link byte/burst/stall tallies,
+# per-resource queue-occupancy high-water marks, and the ring plane's
+# doorbell / credit / fairness counters.  Always counting — the increments
+# are dict adds, same cost class as the old ad-hoc stats — while span timing
+# stays gated on an active telemetry session.
 _LINKS = _tm.bank("links")
 _QUEUES = _tm.bank("queues")
+_RINGS = _tm.bank("rings")
 
 # Batched-round programs, shared by every scheduler instance: keyed by the
 # round's descriptor identities (same scheme as the CFG cache), so a fresh
@@ -59,6 +75,9 @@ _QUEUES = _tm.bank("queues")
 # churn must not pin programs (and captured weight arrays) forever.
 _ROUND_CACHE: "collections.OrderedDict[Any, Callable]" = collections.OrderedDict()
 _ROUND_CACHE_CAPACITY = 256
+# Round programs inline CFG-cache lowerings, so xdma.clear_cache() must drop
+# them too — a stale round program would bypass the cleared cache.
+_api._AUX_CACHES.append(_ROUND_CACHE)
 
 
 def _burst_bytes(desc: XDMADescriptor, value: Any) -> Optional[int]:
@@ -100,10 +119,15 @@ class XDMAFuture:
         return self._sched._tasks[self.task_id].done
 
     def result(self) -> Any:
-        """Drain the scheduler until this task has dispatched, then return
-        its output (the physical dst buffer, exactly as ``xdma.transfer``)."""
-        self._sched.flush()
-        return self._sched._tasks[self.task_id].value
+        """Drain the scheduler until *this* task has dispatched, then return
+        its output (the physical dst buffer, exactly as ``xdma.transfer``).
+        Later independent tasks stay pending — ``result()`` runs scheduling
+        rounds only until this task's completion retires; use ``flush()`` to
+        drain everything."""
+        t = self._sched._tasks[self.task_id]
+        while not t.done:
+            self._sched.step()
+        return t.value
 
     def __repr__(self):
         state = "done" if self.done() else "pending"
@@ -123,6 +147,8 @@ class _Task:
     nbytes: Optional[int] = None
     burst_bytes: Optional[int] = None    # pattern contiguity (link pricing)
     label: str = ""
+    tenant: str = ""                     # which per-tenant ring holds it
+    csr_writes: int = 0                  # doorbell CSR writes to price
     done: bool = False
     value: Any = None
     round: int = -1
@@ -131,19 +157,50 @@ class _Task:
 
 
 class DistributedScheduler:
-    """The distributed Controller: one in-order FIFO per topology link."""
+    """The distributed Controller: descriptor rings per (resource, tenant).
+
+    ``ring_depth`` bounds every ring (credits = free slots); ``backpressure``
+    picks the full-ring policy — ``"block"`` (default) drains scheduling
+    rounds inside ``submit`` until a credit frees, ``"error"`` raises
+    :class:`~repro.runtime.ring.WouldBlock` for the caller to handle.
+    Blocking can never deadlock: dependencies must already be submitted, so
+    the oldest pending task always sits dep-satisfied at its ring head and
+    every round retires at least one descriptor."""
 
     def __init__(self, topology: Topology, *, interpret: bool = True,
-                 name: str = "sched"):
+                 name: str = "sched", ring_depth: int = DEFAULT_RING_DEPTH,
+                 backpressure: str = "block"):
+        if backpressure not in ("block", "error"):
+            raise ValueError(f"backpressure must be 'block' or 'error', "
+                             f"got {backpressure!r}")
         self.topology = topology
         self.interpret = interpret
         self.name = name
+        self.ring_depth = int(ring_depth)
+        self.backpressure = backpressure
         self._tasks: Dict[int, _Task] = {}
-        self._fifos: Dict[str, List[int]] = {n: [] for n in topology.link_names}
-        self._heads: Dict[str, int] = {n: 0 for n in topology.link_names}
+        # resource -> tenant -> its descriptor ring (created on first post)
+        self._rings: Dict[str, Dict[str, DescriptorRing]] = {
+            n: {} for n in topology.link_names}
+        self._rr: Dict[str, int] = {}    # per-resource tenant-arbitration cursor
+        self._dispatched: Dict[str, List[int]] = {}  # per-resource pop order
+        self.completions: List[Completion] = []      # the completion queue
+        self._sim_end: Dict[int, float] = {}         # task id -> simulated end
+        self._sim_free: Dict[str, float] = {}        # resource -> busy-until
+        self._makespan_inc = 0.0         # incremental makespan (== replay)
+        self._pending = 0
         self._next_id = 0
         self._next_link = 0              # round-robin routing cursor
         self._rounds = 0
+
+    def _ring(self, resource: str, tenant: str) -> DescriptorRing:
+        rings = self._rings.setdefault(resource, {})
+        ring = rings.get(tenant)
+        if ring is None:
+            who = f"{resource}/{tenant}" if tenant else resource
+            ring = DescriptorRing(who, self.ring_depth)
+            rings[tenant] = ring
+        return ring
 
     # -- submission ----------------------------------------------------------
     def _route(self, desc: XDMADescriptor, link: Optional[str]) -> str:
@@ -163,13 +220,24 @@ class DistributedScheduler:
         for d in task.deps:
             if d not in self._tasks:
                 raise ValueError(f"dependency on unknown task {d}")
+        ring = self._ring(task.resource, task.tenant)
+        if ring.is_full:
+            _RINGS.inc(f"full:{task.resource}")
+            if self.backpressure == "error":
+                raise WouldBlock(task.resource, task.tenant, ring.depth)
+            # block: drain scheduling rounds until a completion returns a
+            # credit.  The ring's own head is pending, so step() always
+            # progresses (or raises on a genuine dependency cycle).
+            while ring.is_full:
+                self.step()
         self._tasks[task.id] = task
-        self._fifos.setdefault(task.resource, [])
-        self._heads.setdefault(task.resource, 0)
-        self._fifos[task.resource].append(task.id)
-        _QUEUES.record_max(f"occupancy_hw:{task.resource}",
-                           len(self._fifos[task.resource])
-                           - self._heads[task.resource])
+        self._pending += 1
+        ring.post(task.id)               # descriptor write + doorbell
+        _RINGS.inc(f"doorbells:{task.resource}")
+        occupied = sum(r.occupancy
+                       for r in self._rings[task.resource].values())
+        _QUEUES.record_max(f"occupancy_hw:{task.resource}", occupied)
+        _RINGS.record_max(f"credits_hw:{task.resource}", occupied)
         return XDMAFuture(self, task.id)
 
     def _dep_events(self, deps: Tuple[int, ...]) -> Tuple[int, ...]:
@@ -190,56 +258,66 @@ class DistributedScheduler:
 
     def submit(self, x: Any, desc: XDMADescriptor, *,
                link: Optional[str] = None, deps: Sequence = (),
-               nbytes: Optional[int] = None, label: str = "") -> XDMAFuture:
-        """Route one XDMA task to a per-link FIFO; returns its future.
+               nbytes: Optional[int] = None, label: str = "",
+               tenant: str = "") -> XDMAFuture:
+        """Post one XDMA descriptor into a per-(link, tenant) ring; returns
+        its future.
 
         ``x`` is the src physical buffer or the :class:`XDMAFuture` of the
         task producing it; ``deps`` adds ordering-only dependency tokens.
         ``link`` pins the task to a named link (round-robin otherwise).
+        ``tenant`` names the submitter's ring on that link — per-tenant rings
+        are arbitrated round-robin at dispatch, so one tenant flooding its
+        ring cannot starve another.  The post consumes a ring credit; see the
+        class docstring for the full-ring ``backpressure`` policy.
         """
         tel = _tm._ACTIVE
         if tel is None:
-            return self._submit(x, desc, link, deps, nbytes, label)
+            return self._submit(x, desc, link, deps, nbytes, label, tenant)
         with tel.span("DistributedScheduler.submit", track="scheduler",
                       desc=desc.summary() if isinstance(desc, XDMADescriptor)
                       else repr(desc)):
-            return self._submit(x, desc, link, deps, nbytes, label)
+            return self._submit(x, desc, link, deps, nbytes, label, tenant)
 
-    def _submit(self, x, desc, link, deps, nbytes, label) -> XDMAFuture:
+    def _submit(self, x, desc, link, deps, nbytes, label,
+                tenant="") -> XDMAFuture:
         if not isinstance(desc, XDMADescriptor):
             raise TypeError(f"submit takes a descriptor, got {type(desc)}")
         tid = self._next_id
         self._next_id += 1
         task = _Task(id=tid, kind="xdma", resource=self._route(desc, link),
                      deps=self._dep_ids((x,), deps), desc=desc, inputs=(x,),
-                     nbytes=nbytes, label=label or desc.summary())
+                     nbytes=nbytes, label=label or desc.summary(),
+                     tenant=tenant, csr_writes=1)
         fut = self._enqueue(task)        # validate before the ledger records:
         cap = _api._CAPTURE              # a rejected submit must not leave a
         if cap is not None:              # phantom event (DESIGN.md §9)
             task.event = cap.record_submit(
                 x if not isinstance(x, XDMAFuture) else None, desc,
                 task.resource, deps=self._dep_events(task.deps),
-                label=task.label)
+                label=task.label,
+                ring_occupancy=self._rings[task.resource][tenant].occupancy)
             task.trace = cap
         return fut
 
     def submit_compute(self, fn: Callable, *inputs: Any,
                        resource: str = "compute0", deps: Sequence = (),
-                       cost_s: float = 0.0, label: str = "") -> XDMAFuture:
+                       cost_s: float = 0.0, label: str = "",
+                       tenant: str = "") -> XDMAFuture:
         """Enqueue interleaved compute on a named engine (in-order per
         engine).  ``cost_s`` is its duration in the simulated timeline."""
         tel = _tm._ACTIVE
         if tel is None:
             return self._submit_compute(fn, inputs, resource, deps, cost_s,
-                                        label)
+                                        label, tenant)
         with tel.span("DistributedScheduler.submit_compute",
                       track="scheduler", resource=resource,
                       label=label or getattr(fn, "__name__", "compute")):
             return self._submit_compute(fn, inputs, resource, deps, cost_s,
-                                        label)
+                                        label, tenant)
 
     def _submit_compute(self, fn, inputs, resource, deps, cost_s,
-                        label) -> XDMAFuture:
+                        label, tenant="") -> XDMAFuture:
         if resource in self.topology:
             raise ValueError(f"{resource!r} is a link; compute engines must "
                              "use a non-link resource name")
@@ -247,7 +325,8 @@ class DistributedScheduler:
         self._next_id += 1
         task = _Task(id=tid, kind="compute", resource=resource,
                      deps=self._dep_ids(inputs, deps), fn=fn, inputs=inputs,
-                     cost_s=float(cost_s), label=label or getattr(fn, "__name__", "compute"))
+                     cost_s=float(cost_s), tenant=tenant,
+                     label=label or getattr(fn, "__name__", "compute"))
         fut = self._enqueue(task)
         cap = _api._CAPTURE
         if cap is not None:
@@ -264,18 +343,32 @@ class DistributedScheduler:
         return obj
 
     def _ready_heads(self) -> List[_Task]:
+        """One ready ring head per resource, round-robin over its tenants.
+
+        The rotating cursor is the credit arbitration: each round a resource
+        serves the next tenant (in first-post order) whose head is
+        dependency-ready, so a tenant flooding its ring gets at most one
+        dispatch per round like everyone else.  With a single tenant this is
+        exactly the old FIFO-head behavior, including stall accounting."""
         ready = []
-        for res in self._fifos:
-            q = self._fifos[res]
-            i = self._heads[res]
-            if i >= len(q):
+        for res, rings in self._rings.items():
+            tenants = [tn for tn, r in rings.items() if not r.is_empty]
+            if not tenants:
                 continue
-            t = self._tasks[q[i]]
-            if all(self._tasks[d].done for d in t.deps):
-                ready.append(t)
+            cursor = self._rr.get(res, 0)
+            picked = None
+            for k in range(len(tenants)):
+                tn = tenants[(cursor + k) % len(tenants)]
+                t = self._tasks[rings[tn].head()]
+                if all(self._tasks[d].done for d in t.deps):
+                    picked = t
+                    self._rr[res] = (cursor + k + 1) % len(tenants)
+                    break
+            if picked is not None:
+                ready.append(picked)
             else:
-                # head task blocked on a dependency while its resource idles:
-                # one stall round on this resource
+                # every occupied ring's head blocked on a dependency while
+                # the resource idles: one stall round on this resource
                 _LINKS.inc(f"stall_rounds:{res}")
         return ready
 
@@ -342,8 +435,43 @@ class DistributedScheduler:
                 self._count_dispatch(t)
             t.done = True
             t.round = self._rounds
-            self._heads[t.resource] += 1
+            self._complete(t)
         self._rounds += 1
+
+    def _complete(self, t: _Task) -> None:
+        """Retire a dispatched task's ring head: return its credit, push a
+        completion-queue entry, and advance the incremental makespan.
+
+        The span arithmetic mirrors ``simulator.simulate`` operation for
+        operation (same dep-max, same ``transfer_time`` call, same doorbell
+        add), and per-resource completion order IS the replay's queue order,
+        so ``_makespan_inc`` is bit-equal to ``report().makespan`` whenever
+        the rings are drained."""
+        popped = self._rings[t.resource][t.tenant].pop()
+        assert popped == t.id, (popped, t.id)
+        self._dispatched.setdefault(t.resource, []).append(t.id)
+        self._pending -= 1
+        ready = max((self._sim_end[d] for d in t.deps), default=0.0)
+        start = max(ready, self._sim_free.get(t.resource, 0.0))
+        if t.resource in self.topology:
+            link = self.topology.link(t.resource)
+            dur = link.transfer_time(
+                int(t.nbytes or 0), t.burst_bytes,
+                issue_overhead=None,
+                pipeline_depth=(t.desc.d_buf if t.desc is not None else 1))
+            if t.csr_writes:
+                dur += t.csr_writes * link.csr_write_cost
+        else:
+            dur = max(0.0, float(t.cost_s))
+        stop = start + dur
+        self._sim_end[t.id] = stop
+        self._sim_free[t.resource] = stop
+        if stop > self._makespan_inc:
+            self._makespan_inc = stop
+        self.completions.append(Completion(
+            task_id=t.id, resource=t.resource, tenant=t.tenant,
+            round=self._rounds, start_s=start, end_s=stop))
+        _RINGS.inc(f"tenant_dispatch:{t.tenant or 'default'}")
 
     def _count_dispatch(self, t: _Task) -> None:
         """Per-link CSR counters for one finalized dispatch: payload bytes
@@ -377,32 +505,51 @@ class DistributedScheduler:
             if self.pending:
                 raise ValueError(
                     f"scheduler deadlocked with {self.pending} pending tasks "
-                    "(dependency cycle across FIFOs?)")
+                    "(dependency cycle across rings?)")
             return False
         self._dispatch_round(ready)
         return True
 
     def flush(self) -> None:
-        """Drain every FIFO (runs scheduling rounds until idle)."""
+        """Drain every ring (runs scheduling rounds until idle)."""
         while self.step():
             pass
 
     @property
     def pending(self) -> int:
-        return sum(1 for t in self._tasks.values() if not t.done)
+        return self._pending
 
     # -- replay --------------------------------------------------------------
+    def _sim_order(self) -> List[int]:
+        """Task ids in global submission-order slots, each resource's slots
+        re-filled in its actual dispatch order (pending tasks keep submission
+        order after the dispatched prefix).  With a single tenant per
+        resource, dispatch order IS submission order, so this is the
+        identity — the replay contract existing call sites pin."""
+        ids = sorted(self._tasks)
+        per_res: Dict[str, List[int]] = {}
+        for tid in ids:
+            per_res.setdefault(self._tasks[tid].resource, []).append(tid)
+        fill: Dict[str, collections.deque] = {}
+        for res, tids in per_res.items():
+            done = list(self._dispatched.get(res, ()))
+            pend = [i for i in tids if not self._tasks[i].done]
+            fill[res] = collections.deque(done + pend)
+        return [fill[self._tasks[tid].resource].popleft() for tid in ids]
+
     def sim_tasks(self) -> List[SimTask]:
-        """The recorded schedule as simulator tasks (submission order)."""
+        """The recorded schedule as simulator tasks (dispatch order per
+        resource — see :meth:`_sim_order`)."""
         out = []
-        for tid in sorted(self._tasks):
+        for tid in self._sim_order():
             t = self._tasks[tid]
             out.append(SimTask(id=t.id, resource=t.resource,
                                nbytes=int(t.nbytes or 0), deps=t.deps,
                                cost_s=t.cost_s, label=t.label,
                                burst_bytes=t.burst_bytes,
                                pipeline_depth=(t.desc.d_buf if t.desc is not None
-                                               else 1)))
+                                               else 1),
+                               csr_writes=t.csr_writes))
         return out
 
     def report(self) -> SimReport:
@@ -418,14 +565,27 @@ class DistributedScheduler:
 
     def makespan(self) -> float:
         """Simulated seconds to drain everything dispatched so far — the
-        serving engines' per-step clock advance."""
-        return self.report().makespan
+        serving engines' per-step clock advance.
+
+        O(1) when the rings are drained: the completion queue maintains the
+        makespan incrementally with the replay's exact arithmetic.  With
+        tasks still pending it falls back to the full replay (which prices
+        the undispatched tail too)."""
+        if self._pending:
+            return self.report().makespan
+        return self._makespan_inc
 
     def summary(self) -> str:
         lines = [f"DistributedScheduler({self.name!r}, "
-                 f"{len(self._tasks)} tasks, {self._rounds} rounds)"]
-        for res, q in self._fifos.items():
-            if q:
-                lines.append(f"  {res}: {len(q)} tasks "
-                             f"({self._heads.get(res, 0)} dispatched)")
+                 f"{len(self._tasks)} tasks, {self._rounds} rounds, "
+                 f"{len(self.completions)} completions)"]
+        for res, rings in self._rings.items():
+            for tn, ring in rings.items():
+                total = ring.occupancy + sum(
+                    1 for tid in self._dispatched.get(res, ())
+                    if self._tasks[tid].tenant == tn)
+                if total:
+                    lines.append(f"  {ring.name}: {total} tasks "
+                                 f"({total - ring.occupancy} dispatched, "
+                                 f"{ring.credits}/{ring.depth} credits)")
         return "\n".join(lines)

@@ -44,7 +44,13 @@ class SimTask:
     address-issue cost (None = the link's hardware AGU default; pass
     ``topology.SW_ISSUE_OVERHEAD`` for software address generation), and the
     ``d_buf`` stream-buffer depth amortizing it.  All default to the legacy
-    one-burst model."""
+    one-burst model.
+
+    ``csr_writes`` is the number of doorbell CSR writes this task's
+    *configuration* cost — ring-based descriptor submission posts one per
+    descriptor — each priced at ``link.csr_write_cost`` on top of the data
+    transfer time.  Defaults to 0 (hand-built and replayed schedules price
+    pure data movement)."""
 
     id: int
     resource: str
@@ -55,6 +61,7 @@ class SimTask:
     burst_bytes: Optional[int] = None
     issue_overhead_s: Optional[float] = None
     pipeline_depth: int = 1
+    csr_writes: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,10 +157,13 @@ def simulate(tasks: Sequence[SimTask], topology: Topology) -> SimReport:
                 ready = max((end[d] for d in t.deps), default=0.0)
                 start = max(ready, free[res])
                 if t.resource in topology:
-                    dur = topology.link(t.resource).transfer_time(
+                    link = topology.link(t.resource)
+                    dur = link.transfer_time(
                         t.nbytes, t.burst_bytes,
                         issue_overhead=t.issue_overhead_s,
                         pipeline_depth=t.pipeline_depth)
+                    if t.csr_writes:
+                        dur += t.csr_writes * link.csr_write_cost
                 else:
                     dur = max(0.0, float(t.cost_s))
                 stop = start + dur
@@ -198,19 +208,20 @@ def simulate(tasks: Sequence[SimTask], topology: Topology) -> SimReport:
 
 
 def serialize(tasks: Sequence[SimTask], link: str,
-              topology: Topology = None) -> List[SimTask]:
+              topology: Optional[Topology] = None) -> List[SimTask]:
     """The in-order baseline: every transfer mapped onto one link, submission
     order preserved (what a single ``XDMAQueue`` FIFO does).  Compute tasks
     keep their own engines — only link traffic is serialized.  Pass the
     ``topology`` to identify transfers exactly (task resource is one of its
-    links); without it, tasks that look like pure compute (a cost but no
-    bytes) are left untouched."""
+    links); without it, any task that moves no bytes is treated as compute
+    and left untouched (transfers always have a payload; a zero-cost compute
+    task — a barrier or marker — must stay on its own engine)."""
     out = []
     for t in tasks:
         if topology is not None:
             is_transfer = t.resource in topology
         else:
-            is_transfer = not (t.cost_s > 0 and t.nbytes == 0)
+            is_transfer = t.nbytes > 0
         out.append(dataclasses.replace(t, resource=link) if is_transfer else t)
     return out
 

@@ -13,6 +13,8 @@ module is that CSR file for the whole reproduction (DESIGN.md §11):
   ``repro.core.api.cache_stats()``, ``repro.kernels.agu.agu_stats()``,
   ``repro.core.plugin_compiler.cfg_stats()``, the scheduler's per-link
   accounting, ``PagedKVPool.stats`` — are now thin views over these banks.
+  The ring plane (DESIGN.md §12) adds a ``rings`` bank: doorbell posts,
+  ring-full events, credits-in-flight high-water, per-tenant dispatches.
 * :class:`Telemetry` — a *session*: span-based timing (host clock via
   context managers, simulated clock via :meth:`Telemetry.add_span`) and
   value histograms (serving TTFT/TBT).  Sessions follow the same ambient
@@ -35,6 +37,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
@@ -221,13 +224,16 @@ class Telemetry:
         self.values.setdefault(name, []).append(float(value))
 
     def percentile(self, name: str, q: float) -> float:
+        """Nearest-rank percentile of histogram ``name``: the smallest
+        recorded sample with at least ``q``% of the samples at or below it
+        (``ceil(n*q/100)``-th order statistic) — always an actual sample,
+        never an interpolated value, so a 1-sample p99 is that sample and a
+        2-sample p99 is the max.  0.0 when the histogram is empty."""
         vals = sorted(self.values.get(name, ()))
         if not vals:
             return 0.0
-        # nearest-rank on the sorted samples — no numpy needed in the leaf
-        k = (len(vals) - 1) * (q / 100.0)
-        lo, hi = int(k), min(int(k) + 1, len(vals) - 1)
-        return vals[lo] + (vals[hi] - vals[lo]) * (k - lo)
+        k = max(1, math.ceil(len(vals) * float(q) / 100.0))
+        return vals[min(k, len(vals)) - 1]
 
     def histogram_summary(self, name: str) -> Dict[str, float]:
         vals = self.values.get(name, ())
@@ -298,8 +304,9 @@ def snapshot() -> Dict[str, Any]:
 
     ``counters`` holds every registered bank; ``surfaces`` re-exports the
     five legacy stats surfaces *verbatim* (they are views over the same
-    banks, so the reconciliation is structural, not coincidental);
-    ``spans``/``histograms`` are the session's timing data.
+    banks, so the reconciliation is structural, not coincidental) plus the
+    ring plane's ``scheduler_rings`` bank; ``spans``/``histograms`` are the
+    session's timing data.
     """
     a = _ACTIVE
     if a is None:
@@ -316,6 +323,7 @@ def snapshot() -> Dict[str, Any]:
         "agu_stats": _agu.agu_stats(),
         "cfg_stats": _pc.cfg_stats(),
         "scheduler_links": bank("links").as_dict(),
+        "scheduler_rings": bank("rings").as_dict(),
         "pool_stats": {d[len("pool:"):]: b.as_dict()
                        for d, b in _BANKS.items() if d.startswith("pool:")},
     }

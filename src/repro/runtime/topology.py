@@ -28,12 +28,18 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["Link", "Topology", "DEFAULT_BANDWIDTH", "DEFAULT_LATENCY"]
+__all__ = ["Link", "Topology", "DEFAULT_BANDWIDTH", "DEFAULT_LATENCY",
+           "DEFAULT_DOORBELL_COST"]
 
 # Defaults sized like one ICI link: ~100 GB/s, ~1 us hop latency, 512-bit beats.
 DEFAULT_BANDWIDTH = 100e9       # bytes / second
 DEFAULT_LATENCY = 1e-6          # seconds
 DEFAULT_WIDTH = 64              # bytes per beat (512-bit link)
+# One doorbell CSR write over the config bus (a posted 32/64-bit register
+# write, not a DMA): the price of *configuration* as distinct from data
+# transfer.  Orders of magnitude below a transfer's latency, so descriptor
+# posting never dominates — the paper's point in separating the two planes.
+DEFAULT_DOORBELL_COST = 20e-9   # seconds per CSR write
 # Per-burst re-issue cost of a *hardware* address generator (the Frontend
 # computes the next burst address in a pipeline stage); software address
 # generation pays the core's loop + DMA-programming cost per burst instead —
@@ -50,7 +56,9 @@ class Link:
     beat), ``width`` the beat size in bytes (transfers are rounded up to whole
     beats, the hardware burst granularity), ``burst_overhead`` the per-burst
     address re-issue cost when a transfer is priced by its address pattern
-    (see :meth:`transfer_time`).
+    (see :meth:`transfer_time`), and ``csr_write_cost`` the price of one
+    doorbell CSR write — what ring-based descriptor submission pays per
+    posted descriptor, separately from the data transfer itself.
     """
 
     name: str
@@ -60,6 +68,7 @@ class Link:
     latency: float = DEFAULT_LATENCY
     width: int = DEFAULT_WIDTH
     burst_overhead: float = DEFAULT_BURST_OVERHEAD
+    csr_write_cost: float = DEFAULT_DOORBELL_COST
 
     def __post_init__(self):
         if self.bandwidth <= 0:
@@ -70,6 +79,8 @@ class Link:
             raise ValueError(f"link {self.name!r}: width must be >= 1")
         if self.burst_overhead < 0:
             raise ValueError(f"link {self.name!r}: burst_overhead must be >= 0")
+        if self.csr_write_cost < 0:
+            raise ValueError(f"link {self.name!r}: csr_write_cost must be >= 0")
 
     def transfer_time(self, nbytes: int, burst_bytes: Optional[int] = None, *,
                       issue_overhead: Optional[float] = None,
@@ -133,7 +144,8 @@ class Topology:
     def add_link(self, src: str, dst: str, *, name: Optional[str] = None,
                  bandwidth: float = DEFAULT_BANDWIDTH,
                  latency: float = DEFAULT_LATENCY,
-                 width: int = DEFAULT_WIDTH) -> Link:
+                 width: int = DEFAULT_WIDTH,
+                 csr_write_cost: float = DEFAULT_DOORBELL_COST) -> Link:
         self.add_node(src)
         self.add_node(dst)
         if name is None:
@@ -141,7 +153,8 @@ class Topology:
         if name in self._links:
             raise ValueError(f"duplicate link name {name!r}")
         link = Link(name=name, src=src, dst=dst, bandwidth=bandwidth,
-                    latency=latency, width=width)
+                    latency=latency, width=width,
+                    csr_write_cost=csr_write_cost)
         self._links[name] = link
         return link
 

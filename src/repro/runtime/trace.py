@@ -101,7 +101,9 @@ class TraceEvent:
     of *both* replay cost models; ``row_bytes`` is one logical row, the
     fallback issue unit when no pattern exists (plugin chains, remote
     exchanges).  ``deps`` are ledger event ids (data-flow provenance plus
-    any scheduler dependency tokens)."""
+    any scheduler dependency tokens).  ``ring_occupancy`` is the submitting
+    descriptor ring's occupancy right after the doorbell (scheduler submits
+    only; None elsewhere) — the queue-pressure axis of the ledger."""
 
     id: int
     kind: str                            # "xdma" | "compute"
@@ -119,6 +121,7 @@ class TraceEvent:
     cost_s: float = 0.0
     label: str = ""
     source: str = "transfer"             # transfer | queue | scheduler | compute
+    ring_occupancy: Optional[int] = None
 
 
 def _wire_nbytes(desc: XDMADescriptor, logical_shape, in_dtype) -> Optional[int]:
@@ -288,16 +291,21 @@ class TransferTrace:
         return evs
 
     def record_submit(self, x: Any, desc: XDMADescriptor, link: str, *,
-                      deps: Sequence[int] = (), label: str = "") -> TraceEvent:
+                      deps: Sequence[int] = (), label: str = "",
+                      ring_occupancy: Optional[int] = None) -> TraceEvent:
         """A scheduler-submitted task; sizes are finalized at dispatch via
-        :meth:`finalize` (the scheduler measures the real payload then)."""
+        :meth:`finalize` (the scheduler measures the real payload then).
+        ``ring_occupancy`` records the submitting ring's fill level right
+        after the doorbell."""
         leaf = _primary_leaf(x)
         shape = getattr(leaf, "shape", None)
         dtype = getattr(leaf, "dtype", None)
         all_deps = tuple(dict.fromkeys(tuple(deps) + self._provenance(x)))
-        return self._event(desc, logical=_logical_of(desc, shape, dtype),
-                           dtype=dtype, deps=all_deps,
-                           label=label, source="scheduler", link=link)
+        ev = self._event(desc, logical=_logical_of(desc, shape, dtype),
+                         dtype=dtype, deps=all_deps,
+                         label=label, source="scheduler", link=link)
+        ev.ring_occupancy = ring_occupancy
+        return ev
 
     def record_compute(self, resource: str, cost_s: float, *,
                        deps: Sequence[int] = (), label: str = "") -> TraceEvent:

@@ -223,7 +223,9 @@ class ContinuousBatchingEngine:
                  pool: Optional[PagedKVPool] = None,
                  page_rows: int = DEFAULT_PAGE_ROWS,
                  capacity_pages: Optional[int] = None,
-                 defrag: bool = True, mesh=None):
+                 defrag: bool = True, mesh=None,
+                 ring_depth: Optional[int] = None,
+                 backpressure: str = "block"):
         if cfg.encoder_layers:
             raise NotImplementedError("continuous batching serves decoder "
                                       "LMs; encoder-decoder configs use "
@@ -246,9 +248,20 @@ class ContinuousBatchingEngine:
         self._n_params = sum(
             int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params)
             if getattr(l, "ndim", 0) >= 1)
+        self.ring_depth = ring_depth
+        self.backpressure = backpressure
         self.last_scheduler = None
         self.steps = 0
         self.preemptions = 0
+
+    def _new_scheduler(self) -> DistributedScheduler:
+        """One fresh per-step scheduler, carrying the engine's ring knobs
+        (``ring_depth=None`` keeps the scheduler default — deep enough that
+        a serving step never backpressures between flushes; shallow rings
+        exercise page movement under credit pressure)."""
+        kw = {} if self.ring_depth is None else {"ring_depth": self.ring_depth}
+        return DistributedScheduler(self.topology, name="serving-cb",
+                                    backpressure=self.backpressure, **kw)
 
     # -- page accounting -----------------------------------------------------
     def _pages_at(self, meta: _LeafMeta, pos: int) -> int:
@@ -404,8 +417,9 @@ class ContinuousBatchingEngine:
     def _mark(self, tel, sched, t0, cursor, name):
         """Close one engine phase on the simulated clock: the span runs from
         ``cursor`` to ``t0 + makespan-so-far`` (everything submitted up to
-        this point).  Only called with an active telemetry session —
-        ``makespan()`` is a full replay, so the disabled path never pays it."""
+        this point).  Callers flush before marking, so ``makespan()`` is the
+        scheduler's O(1) incremental value from its completion queue — a
+        telemetry-on serve step no longer pays a full replay per phase."""
         now = t0 + sched.makespan()
         if now > cursor:
             tel.add_span(f"engine.{name}", cursor, now, track="engine",
@@ -434,7 +448,7 @@ class ContinuousBatchingEngine:
             if not active and not preempted and queue \
                     and queue[0].req.arrival_s > clock:
                 clock = queue[0].req.arrival_s     # idle: jump to next arrival
-            sched = DistributedScheduler(self.topology, name="serving-cb")
+            sched = self._new_scheduler()
             self.last_scheduler = sched
             self.pool.bind(sched)
             _SERVING.inc("steps")
@@ -518,6 +532,7 @@ class ContinuousBatchingEngine:
             cfut = sched.submit_compute(lambda *a: None, *gfuts, cost_s=cost,
                                         label="compute:decode")
             if tel is not None:
+                sched.flush()              # decode cost lands before the mark
                 cursor = self._mark(tel, sched, clock, cursor, "decode")
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
             for i, (st, c1) in enumerate(

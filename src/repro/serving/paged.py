@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.descriptor import page_descriptor
 from repro.runtime import Topology, telemetry as _tm
+from repro.runtime.ring import WouldBlock
 
 __all__ = ["Page", "PagedKVPool", "default_serving_topology",
            "paginate", "depaginate", "pages_for_rows", "DEFAULT_PAGE_ROWS"]
@@ -161,9 +162,22 @@ class PagedKVPool:
     def _submit(self, data, desc, *, kind: str, label: str, deps=()):
         """The pool's single movement primitive — every page byte goes
         through here, so the movement counter and the capture ledger agree
-        exactly."""
-        fut = self._require_sched().submit(data, desc, link=self._link(kind),
-                                           deps=deps, label=label)
+        exactly.
+
+        Honors ring backpressure: on an ``error``-policy scheduler whose
+        ring is out of credits, drain one scheduling round (a completion
+        returns a credit) and repost — page movement never deadlocks on a
+        full ring, it just waits its turn (preemption under ring pressure
+        rides on exactly this loop)."""
+        sched = self._require_sched()
+        link = self._link(kind)
+        while True:
+            try:
+                fut = sched.submit(data, desc, link=link, deps=deps,
+                                   label=label)
+                break
+            except WouldBlock:
+                sched.step()
         self._bank.inc("movements")
         return fut
 

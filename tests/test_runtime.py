@@ -225,6 +225,47 @@ def test_serialize_preserves_scheduler_submission_order(n_links):
         assert order == _scheduler_dispatch_order(sched, "link0")
 
 
+def test_serialize_keeps_zero_cost_compute_off_the_link():
+    """Without a topology, ``serialize`` must classify by *traffic* (does the
+    task move bytes?), not by cost: a barrier-style compute task with
+    ``cost_s=0, nbytes=0`` stays on its engine instead of being serialized
+    into link traffic (regression: the old predicate ``cost_s > 0`` rerouted
+    it and the replay then rejected the engine-less schedule)."""
+    tasks = [SimTask(id=0, resource="link1", nbytes=1 << 20),
+             SimTask(id=1, resource="engine0", nbytes=0, cost_s=0.0,
+                     deps=(0,)),
+             SimTask(id=2, resource="link1", nbytes=1 << 10, deps=(1,))]
+    serial = serialize(tasks, "link0")           # no topology on purpose
+    assert [t.resource for t in serial] == ["link0", "engine0", "link0"]
+    rep = simulate(serial, Topology.parallel(1))
+    assert rep.span_of(1).start == rep.span_of(0).end
+
+
+def test_stall_rounds_counter_reconciles_with_sim_contention():
+    """`stall_rounds:<link>` pins the scheduler's blocked-round accounting:
+    one increment per round a link's ring head waits on cross-link data.
+    T2 (link1) deps T0 (link0) -> link1 blocks for exactly one round; the
+    replay agrees — T2's wait was data (zero span stall), while the tasks
+    queued behind a busy link (T1, T3) carry all the contention stall."""
+    from repro.runtime import telemetry
+    telemetry.reset("links")
+    sched = DistributedScheduler(Topology.parallel(2))
+    x = rand((256, 512))
+    desc = C.describe("MN", "MNM8N128")
+    f0 = sched.submit(x, desc, link="link0")
+    sched.submit(x, desc, link="link0")
+    sched.submit(x, desc, link="link1", deps=(f0,))
+    sched.submit(x, desc, link="link1")
+    sched.flush()
+    bank = telemetry.bank("links")
+    assert bank.get("stall_rounds:link1") == 1
+    assert bank.get("stall_rounds:link0", 0) == 0
+    rep = sched.report()
+    assert rep.span_of(2).stall == 0.0           # waited on data, not link1
+    assert rep.span_of(3).stall > 0.0            # queued behind T2's slot
+    assert rep.contention_stall == rep.span_of(1).stall + rep.span_of(3).stall
+
+
 def test_scheduler_routing_and_validation():
     sched = DistributedScheduler(Topology.parallel(2))
     x = rand((8, 128))

@@ -282,6 +282,45 @@ def test_pool_stats_is_view_over_registered_bank():
     assert snap["surfaces"]["pool_stats"]["tpool"]["stores"] == 1
 
 
+def test_percentile_is_nearest_rank():
+    """The documented estimator is nearest-rank (``ceil(n*q/100)``-th order
+    statistic): always an actual sample, never interpolated (regression:
+    the old implementation linearly interpolated while the docstring
+    promised nearest-rank)."""
+    tel = telemetry.Telemetry("t")
+    tel.record_value("lat", 5.0)
+    assert tel.percentile("lat", 99) == 5.0      # 1-sample p99 = the sample
+    assert tel.percentile("lat", 50) == 5.0
+    tel.record_value("lat", 1.0)
+    assert tel.percentile("lat", 99) == 5.0      # 2-sample p99 = the max,
+    assert tel.percentile("lat", 50) == 1.0      # not 1 + 0.98*(5-1)
+    tel.record_value("lat", 2.0)
+    tel.record_value("lat", 3.0)
+    # 4 samples, p50: ceil(4*0.5) = 2nd order statistic — an exact-rank hit
+    assert tel.percentile("lat", 50) == 2.0
+    assert tel.percentile("lat", 100) == 5.0
+    assert tel.percentile("empty", 99) == 0.0
+
+
+def test_rings_bank_counts_doorbells_and_snapshot_surfaces_them():
+    """The ring plane's counters live in ``bank("rings")`` and ride the
+    snapshot as the ``scheduler_rings`` surface (DESIGN.md §12)."""
+    telemetry.reset("rings")
+    sched = DistributedScheduler(Topology.parallel(1), ring_depth=2)
+    x = rand((64, 128))
+    desc = C.describe("MN", "MN")
+    for _ in range(3):
+        sched.submit(x, desc, link="link0", tenant="a")
+    sched.flush()
+    with telemetry.session(name="rings"):
+        snap = telemetry.snapshot()
+    rings = snap["surfaces"]["scheduler_rings"]
+    assert rings["doorbells:link0"] == 3
+    assert rings["full:link0"] == 1              # the third post blocked once
+    assert rings["credits_hw:link0"] == 2        # high-water == ring depth
+    assert rings["tenant_dispatch:a"] == 3
+
+
 # -- snapshot + serving SLO --------------------------------------------------
 def _serve_under_session(model, n_requests=3):
     from repro.serving import ContinuousBatchingEngine, uniform_stream
