@@ -1,0 +1,78 @@
+"""Autotuned vs hand-picked layouts under the link cost model (DESIGN.md §13).
+
+For each PR-4 relayout-sweep workload the hand pick is the layout the sweep
+has always used (the dtype-native VREG tile, or ``MN`` for the plain
+transpose); the autotuned pick is what :func:`repro.core.autotune.autotune`
+chooses for the same movement on the same default fabric.  Both are priced
+with the same burst-granular cost model, so the ratio is deterministic —
+an ``auto/<case>/ratio`` below 1.0 would mean the search returned a layout
+the cost model itself considers worse, which the property test forbids.
+
+A fifth row pair exercises the generated-tile lattice: the rank-3 batched
+buffer where every *named* tiled layout is beaten by a searched row-panel
+tile (the PR-9 strict-win acceptance case).
+
+Rows: ``autotune/<case>/{hand,auto}`` (model-priced us, effective GB/s) and
+``autotune/<case>/ratio`` (hand_cost / auto_cost, higher is better).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.core import autotune as at
+from repro.core import layouts as L
+
+SWEEP_SHAPE = (512, 512)
+RANK3_SHAPE = (6, 48, 48)
+
+# (case, shape, movements-with-the-tuned-side-as-candidate, hand layout)
+CASES = [
+    ("tile", SWEEP_SHAPE, (at.Movement(L.MN, "dst"),), L.MNM8N128),
+    ("untile", SWEEP_SHAPE, (at.Movement(L.MN, "src"),), L.MNM8N128),
+    ("ttrans", SWEEP_SHAPE,
+     (at.Movement(L.MNM8N128, "dst", transpose=True),), L.MNM8N128),
+    ("mntrans", SWEEP_SHAPE, (at.Movement(L.MN, "dst", transpose=True),), L.MN),
+]
+NAMED_TILED = (L.MNM8N128, L.MNM16N128, L.MNM32N128, L.MNM8N8, L.NMM8N128,
+               L.KV4M8N128)
+
+
+def _rows():
+    link = at.DEFAULT_LINK
+    rows = []
+
+    def emit(case, shape, hand_name, hand_cost, auto_name, auto_cost):
+        nbytes = math.prod(shape) * 4
+        rows.append((f"autotune/{case}/hand:{hand_name}", hand_cost * 1e6,
+                     nbytes / hand_cost / 1e9))
+        rows.append((f"autotune/{case}/auto:{auto_name}", auto_cost * 1e6,
+                     nbytes / auto_cost / 1e9))
+        rows.append((f"autotune/{case}/ratio", auto_cost * 1e6,
+                     hand_cost / auto_cost))
+
+    for case, shape, movements, hand in CASES:
+        hand_cost = at.layout_cost(hand, shape, jnp.float32, movements, link)
+        result = at.autotune(shape, jnp.float32, movements=movements)
+        emit(case, shape, hand.name, hand_cost, result.layout.name,
+             result.cost)
+
+    # rank-3 strict win: the best *named* tiled layout vs the searched pick
+    movements = (at.Movement(L.MN, "dst"),)
+    named = [(lay, at.layout_cost(lay, RANK3_SHAPE, jnp.float32, movements,
+                                  link)) for lay in NAMED_TILED]
+    named = [(lay, c) for lay, c in named if math.isfinite(c)]
+    hand, hand_cost = min(named, key=lambda lc: lc[1])
+    result = at.autotune(RANK3_SHAPE, jnp.float32, tiled_only=True)
+    emit("rank3_tiled", RANK3_SHAPE, hand.name, hand_cost,
+         result.layout.name, result.cost)
+    return rows
+
+
+def run(csv: bool = True):
+    rows = _rows()
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.4f},{derived:.4f},")
+    return rows

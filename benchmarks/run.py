@@ -17,17 +17,19 @@ In a full ``--sim`` sweep, sections with no simulator mode are *skipped* (a
 smoke run must stay cheap); ``--only SECTION --sim`` still runs that section
 for real if it has no sim mode.
 
-``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR8.json``):
+``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR9.json``):
 measured relayout GB/s through the fused and generic-AGU Pallas backends,
 the simulated Fig. 4 per-link utilization sweep with the software-AGU vs
 Frontend ratio per traffic pattern, the scheduler rows with their contention
 stalls (now including the ring plane's fairness/overload sweep), the
 ``apps`` section — captured serving/MoE/train application traces replayed
 on multiple fabrics under Frontend vs software-AGU costing (the paper's
-Fig. 11 end-to-end speedups, from ``benchmarks/apps.py``) — and the
+Fig. 11 end-to-end speedups, from ``benchmarks/apps.py``), the
 ``serving_load`` sweep (continuous vs static batching tokens/s and latency
-percentiles vs offered load, from ``benchmarks/serving_load.py``).
-The snapshot is committed into the repo (``BENCH_PR8.json``) so the bench
+percentiles vs offered load, from ``benchmarks/serving_load.py``), and the
+``autotune`` section (cost-model GB/s of autotuned vs hand-picked layouts
+over the relayout sweep, from ``benchmarks/autotune.py``).
+The snapshot is committed into the repo (``BENCH_PR9.json``) so the bench
 trajectory diffs PR over PR; CI also uploads it as an artifact and diffs it
 against the previous snapshot with ``scripts/bench_diff.py``.
 """
@@ -45,6 +47,7 @@ SECTIONS = {
     "sched": ("sched", "distributed scheduler vs in-order queue (multi-link)"),
     "apps": ("apps", "captured application traces replayed per fabric (Fig. 11)"),
     "serving": ("serving_load", "continuous vs static batching vs offered load"),
+    "autotune": ("autotune", "autotuned vs hand-picked layouts (cost model)"),
     "roofline": ("roofline", "dry-run roofline fractions"),
 }
 
@@ -122,10 +125,11 @@ def _cached_apps_rows(csv_path: str):
 
 
 def write_snapshot(path: str) -> None:
-    """The BENCH_PR8 perf snapshot: relayout GB/s, simulated utilization,
-    the captured-application replay table, the serving-load sweep, and the
-    ring plane's fairness/overload rollup."""
+    """The BENCH_PR9 perf snapshot: relayout GB/s, simulated utilization,
+    the captured-application replay table, the serving-load sweep, the ring
+    plane's fairness/overload rollup, and the layout-autotuner comparison."""
     from . import apps, link_utilization, sched, serving_load
+    from . import autotune as autotune_bench
 
     import os
 
@@ -142,9 +146,10 @@ def write_snapshot(path: str) -> None:
         apps_source = "captured"
         app_rows = apps.run(csv=False, sim=True)
     serving_rows = serving_load.run(csv=False)
+    autotune_rows = autotune_bench.run(csv=False)
     gbps = relayout_gbps()
     payload = {
-        "bench": "PR8",
+        "bench": "PR9",
         "columns": {
             "relayout_gbps": ["name", "us_per_call", "gbytes_per_s"],
             "fig4sim": ["name", "simulated_us", "utilization_or_ratio"],
@@ -155,6 +160,7 @@ def write_snapshot(path: str) -> None:
             "serving_load": ["name", "p50_us", "tokens_per_s_or_ratio",
                              "p99_us", "ttft_p50_us", "ttft_p99_us",
                              "tbt_p50_us", "tbt_p99_us"],
+            "autotune": ["name", "model_cost_us", "gbytes_per_s_or_ratio"],
         },
         "sections": {
             "relayout_gbps": [list(r) for r in gbps],
@@ -162,6 +168,7 @@ def write_snapshot(path: str) -> None:
             "sched": [list(r) for r in sched_rows],
             "apps": [list(r) for r in app_rows],
             "serving_load": [list(r) for r in serving_rows],
+            "autotune": [list(r) for r in autotune_rows],
         },
         # the paper's headline comparison axis (Fig. 4): simulated link
         # utilization of Frontend (d_buf=9) over software address generation
@@ -189,6 +196,12 @@ def write_snapshot(path: str) -> None:
             r[0]: r[2] for r in sched_rows
             if r[0].startswith("sched/overload/")
         },
+        # PR-9: autotuned over hand-picked layout cost per sweep workload
+        # (cost-model derived, >= 1.0 by construction; strictly > 1.0 on
+        # at least the tile store and the rank-3 generated-tile case)
+        "autotune_vs_handpicked_ratio": {
+            r[0]: r[2] for r in autotune_rows if r[0].endswith("/ratio")
+        },
         "apps_rows_source": apps_source,
     }
     with open(path, "w") as f:
@@ -197,7 +210,8 @@ def write_snapshot(path: str) -> None:
           f"{len(payload['sw_vs_frontend_ratio_d9'])} fig4 ratios, "
           f"{len(payload['app_speedup_frontend_vs_sw'])} app speedups, "
           f"{len(payload['continuous_over_static_tokens_ratio'])} serving "
-          f"ratios, {len(payload['ring_fairness'])} fairness rows")
+          f"ratios, {len(payload['ring_fairness'])} fairness rows, "
+          f"{len(payload['autotune_vs_handpicked_ratio'])} autotune ratios")
 
 
 def main() -> None:
@@ -209,7 +223,7 @@ def main() -> None:
                     help="list registered sections and exit")
     ap.add_argument("--sim", action="store_true",
                     help="simulator-only mode for sections that support it")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR8.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_PR9.json", default=None,
                     metavar="PATH", help="write the perf snapshot and exit")
     args = ap.parse_args()
     if args.list:

@@ -1,4 +1,4 @@
-"""Quickstart: the XDMA core in thirteen moves.
+"""Quickstart: the XDMA core in fourteen moves.
 
   PYTHONPATH=src python examples/quickstart.py
 
@@ -15,7 +15,10 @@ percentiles from the simulated timeline; move 12 is the telemetry plane
 trace-event export you can open in Perfetto; move 13 is descriptor rings
 (§12) — fixed-depth submission with credit-based backpressure, a ring-full
 ``WouldBlock`` you drain with ``step()``, and O(1) incremental makespan
-from the completion queue.
+from the completion queue; move 14 is the layout autotuner (§13) — spell a
+destination layout ``"auto"`` and the cost model searches the affine-pattern
+space for the cheapest granule-aligned layout on the resolved fabric link,
+memoized per (shape, dtype, fabric).
 """
 import jax
 import jax.numpy as jnp
@@ -203,3 +206,25 @@ print("incremental makespan == replay:",
       ring_sched.makespan() == ring_sched.report().makespan,
       f"({ring_sched.makespan() * 1e6:.1f}us, "
       f"{len(ring_sched.completions)} completions)")
+
+# 14. the layout autotuner (DESIGN.md §13): spell a destination layout
+#     "auto" and the descriptor resolves it against the burst-granular link
+#     cost model — VREG-multiple tile sizes, trailing-dim permutations, and
+#     pad-to-granule strides, beam-searched when the lattice is large and
+#     memoized per (shape, dtype, fabric, endpoint).  transfer()/queues/the
+#     scheduler all resolve transparently; resolve_descriptor shows the pick.
+from repro.core import autotune
+
+auto_desc = C.describe("MN", "auto")
+resolved = autotune.resolve_descriptor(auto_desc, x.shape, x.dtype)
+picked = resolved.dst.layout
+burst_auto = C.relayout_pair(C.MN, picked, x.shape).burst_length()
+burst_hand = C.relayout_pair(C.MN, C.MNM8N128, x.shape).burst_length()
+y_auto = xdma.transfer(x, auto_desc)             # same pick, end to end
+stats = autotune.autotune_stats()
+print(f"autotuned store layout for {x.shape}: {picked.name} "
+      f"(burst {burst_auto} elems vs {burst_hand} through MNM8N128)")
+print(f"autotuner: {stats['searches']} searches, "
+      f"{stats['candidates_scored']} candidates scored, "
+      f"{stats['cache_hits']} cache hits — same key never searches twice")
+assert np.array_equal(np.asarray(picked.to_logical(y_auto)), np.asarray(x))

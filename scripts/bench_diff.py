@@ -25,6 +25,7 @@ RATIO_KEYS = (
     "sw_vs_frontend_ratio_d9",
     "app_speedup_frontend_vs_sw",
     "continuous_over_static_tokens_ratio",
+    "autotune_vs_handpicked_ratio",
 )
 
 

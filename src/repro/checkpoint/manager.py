@@ -21,8 +21,14 @@ staging descriptor is Cast-capable (``stage_dtype=`` saves a down-cast copy
 and restores through the inverse Cast) and Compress-capable
 (``wire_compress_blocks=`` wraps the wire in the block-sparse
 Compress/Decompress pair — lossless, but the ledger prices the compressed
-wire bytes).  Defaults keep the staging a pure copy: bit-identical to the
-pre-plane behaviour.
+wire bytes).  ``stage_layout=`` additionally picks the checkpoint's *at-rest
+layout*: ``"auto"`` asks the cost-model autotuner (DESIGN.md §13) for the
+tiled pick per (shard shape, dtype), a concrete
+:class:`~repro.core.layouts.Layout` forces one; the per-shard layout is
+recorded in ``meta.json`` so restore inverts it (through the plane for a
+local restore, on host for an elastic one).  Defaults keep the staging a
+pure copy: bit-identical to the pre-plane behaviour, and checkpoints written
+without layout metadata restore exactly as before.
 """
 from __future__ import annotations
 
@@ -31,27 +37,61 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api as xdma
+from repro.core import autotune as XA
+from repro.core import layouts as XL
 from repro.core import plugins as XP
 from repro.core.descriptor import describe
 
 
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
 def _flatten_with_paths(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = {}
-    for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        out[key] = leaf
-    return out
+    return {_path_key(path): leaf for path, leaf in flat}
 
 
-def save_pytree(tree, directory: str) -> None:
+# -- at-rest layout metadata (meta.json "layouts") ---------------------------
+def _layout_spec(lay: XL.Layout) -> Dict[str, Any]:
+    return {"name": lay.name,
+            "tile": list(lay.tile) if lay.tile is not None else None,
+            "perm": list(lay.perm) if lay.perm is not None else None,
+            "pad": list(lay.pad) if lay.pad is not None else None}
+
+
+def _layout_from_spec(spec: Dict[str, Any]) -> XL.Layout:
+    try:
+        lay = XL.by_name(spec["name"])
+        if not lay.is_auto:
+            return lay
+    except (KeyError, ValueError):
+        pass
+    return XL.Layout(tuple(spec["tile"]) if spec["tile"] is not None else None,
+                     spec["name"],
+                     perm=tuple(spec["perm"]) if spec["perm"] is not None
+                     else None,
+                     pad=tuple(spec["pad"]) if spec["pad"] is not None
+                     else None)
+
+
+def read_layout_specs(directory: str) -> Dict[str, XL.Layout]:
+    """The per-shard at-rest layouts a checkpoint was staged with (empty for
+    checkpoints written before layout staging existed)."""
+    with open(os.path.join(directory, "meta.json")) as f:
+        specs = json.load(f).get("layouts", {})
+    return {k: _layout_from_spec(s) for k, s in specs.items()}
+
+
+def save_pytree(tree, directory: str,
+                layouts: Optional[Dict[str, XL.Layout]] = None) -> None:
     os.makedirs(directory, exist_ok=True)
     flat = _flatten_with_paths(tree)
     arrays, meta = {}, {}
@@ -62,28 +102,46 @@ def save_pytree(tree, directory: str) -> None:
             a = a.view(np.uint16)
         arrays[k] = a
     np.savez(os.path.join(directory, "arrays.npz"), **arrays)
+    doc: Dict[str, Any] = {"bf16": meta}
+    if layouts:
+        doc["layouts"] = {k: _layout_spec(l) for k, l in layouts.items()}
     with open(os.path.join(directory, "meta.json"), "w") as f:
-        json.dump({"bf16": meta}, f)
+        json.dump(doc, f)
 
 
-def restore_pytree(template, directory: str, sharding_tree=None):
+def restore_pytree(template, directory: str, sharding_tree=None, *,
+                   physical: bool = False):
     """Restore into the structure of ``template``; optionally device_put each
-    leaf with the matching sharding from ``sharding_tree`` (elastic restore)."""
+    leaf with the matching sharding from ``sharding_tree`` (elastic restore).
+
+    Shards saved with an at-rest layout (``meta.json`` ``layouts``) are
+    un-staged to logical on host by default; ``physical=True`` returns them
+    in their stored physical form instead (the manager uses this to route
+    the un-staging relayout through the movement plane)."""
     with np.load(os.path.join(directory, "arrays.npz")) as z:
         data = {k: z[k] for k in z.files}
     with open(os.path.join(directory, "meta.json")) as f:
         bf16 = json.load(f)["bf16"]
+    layouts = read_layout_specs(directory)
     for k in bf16:
         data[k] = data[k].view(jnp.bfloat16)
 
     flat_t = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path, leaf in flat_t[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = _path_key(path)
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key}")
         a = data[key]
-        if tuple(a.shape) != tuple(leaf.shape):
+        lay = layouts.get(key)
+        if lay is not None:
+            logical = tuple(lay.logical_shape(a.shape))
+            if logical != tuple(leaf.shape):
+                raise ValueError(f"{key}: ckpt logical shape {logical} != "
+                                 f"template {leaf.shape}")
+            if not physical:
+                a = np.asarray(lay.to_logical(a))
+        elif tuple(a.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: ckpt shape {a.shape} != template {leaf.shape}")
         leaves.append(a)
     tree = jax.tree_util.tree_unflatten(flat_t[1], leaves)
@@ -94,11 +152,13 @@ def restore_pytree(template, directory: str, sharding_tree=None):
 
 # -- host<->device staging descriptors (the checkpoint's XDMA tasks) ---------
 @functools.lru_cache(maxsize=None)
-def _stage_desc(cast_to: Optional[str], compress_blocks: Optional[int]):
+def _stage_desc(cast_to: Optional[str], compress_blocks: Optional[int],
+                layout: Optional[XL.Layout] = None):
     """One shard's staging DMA: plain copy by default, Cast on the stream
     when the snapshot dtype differs, Compress/Decompress around the wire when
     block compression is on (dense in memory at both ends — the pair is
-    lossless; only the ledger's wire pricing changes)."""
+    lossless; only the ledger's wire pricing changes), relayout fused on the
+    wire when an at-rest ``layout`` is picked."""
     pre = []
     post = []
     if compress_blocks:
@@ -106,21 +166,50 @@ def _stage_desc(cast_to: Optional[str], compress_blocks: Optional[int]):
         post.append(XP.Decompress())
     if cast_to is not None:
         pre.insert(0, XP.Cast(jnp.dtype(cast_to)))
-    return describe("MN", "MN", pre=tuple(pre), post=tuple(post))
+    return describe("MN", layout if layout is not None else "MN",
+                    pre=tuple(pre), post=tuple(post))
+
+
+@functools.lru_cache(maxsize=None)
+def _unstage_desc(layout: XL.Layout, cast_to: Optional[str]):
+    """The restore half of a layout-staged shard: at-rest tiled -> logical,
+    casting back to the template dtype on the same stream when the snapshot
+    was saved down-cast."""
+    pre = (XP.Cast(jnp.dtype(cast_to)),) if cast_to is not None else ()
+    return describe(layout, "MN", pre=pre)
 
 
 class CheckpointManager:
     def __init__(self, root: str, keep: int = 3, *,
-                 stage_dtype=None, wire_compress_blocks: Optional[int] = None):
+                 stage_dtype=None, wire_compress_blocks: Optional[int] = None,
+                 stage_layout=None):
         self.root = root
         self.keep = keep
         self.stage_dtype = stage_dtype
         self.wire_compress_blocks = wire_compress_blocks
+        if isinstance(stage_layout, str) and stage_layout != "auto":
+            stage_layout = XL.by_name(stage_layout)
+        self.stage_layout = stage_layout
         os.makedirs(root, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
-    def _stage(self, x, cast_to=None):
+    def _at_rest_layout(self, a) -> Optional[XL.Layout]:
+        """The at-rest layout for one matrix shard, or None (plain MN
+        snapshot).  ``"auto"`` asks the autotuner for the tiled pick
+        (``tiled_only``: the checkpoint must stay tile-addressable for
+        direct-to-MXU restores); a concrete Layout is used when it fits."""
+        if self.stage_layout is None or a.ndim != 2:
+            return None
+        if isinstance(self.stage_layout, XL.Layout):
+            try:
+                self.stage_layout.check(a.shape)
+            except ValueError:
+                return None                     # shard it cannot tile: plain
+            return self.stage_layout
+        return XA.best_layout(tuple(a.shape), a.dtype, tiled_only=True)
+
+    def _stage(self, x, cast_to=None, layout: Optional[XL.Layout] = None):
         """Move one shard through the plane (device->host or host->device).
         Only matrix-shaped leaves are XDMA tasks; scalars/vectors (step
         counters, biases) ride along as control state."""
@@ -134,33 +223,42 @@ class CheckpointManager:
                                     or not jnp.issubdtype(a.dtype, jnp.floating)):
             cast_to = None
         return xdma.transfer(a, _stage_desc(
-            None if cast_to is None else jnp.dtype(cast_to).name, blocks))
+            None if cast_to is None else jnp.dtype(cast_to).name, blocks,
+            layout))
 
     # -- write --------------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
         self.wait()
         cast = self.stage_dtype
-        snapshot = jax.tree.map(
-            lambda x: np.asarray(jax.device_get(self._stage(x, cast))), tree)
+        layouts: Dict[str, XL.Layout] = {}
+
+        def stage(path, x):
+            lay = self._at_rest_layout(jnp.asarray(x))
+            if lay is not None:
+                layouts[_path_key(path)] = lay
+            return np.asarray(jax.device_get(self._stage(x, cast, lay)))
+
+        snapshot = jax.tree_util.tree_map_with_path(stage, tree)
         if blocking:
-            self._write(step, snapshot)
+            self._write(step, snapshot, layouts)
         else:
             self._thread = threading.Thread(
-                target=self._write_guarded, args=(step, snapshot), daemon=True)
+                target=self._write_guarded, args=(step, snapshot, layouts),
+                daemon=True)
             self._thread.start()
 
-    def _write_guarded(self, step, snapshot):
+    def _write_guarded(self, step, snapshot, layouts):
         try:
-            self._write(step, snapshot)
+            self._write(step, snapshot, layouts)
         except BaseException as e:  # surfaced on next wait()
             self._error = e
 
-    def _write(self, step: int, snapshot) -> None:
+    def _write(self, step: int, snapshot, layouts) -> None:
         tmp = os.path.join(self.root, f"tmp.{step}")
         final = os.path.join(self.root, f"step_{step:010d}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
-        save_pytree(snapshot, tmp)
+        save_pytree(snapshot, tmp, layouts)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -192,8 +290,29 @@ class CheckpointManager:
         model-parallel restores cannot OOM a single device; only the cast
         back to the template dtype is applied on the way."""
         self.wait()
-        tree = restore_pytree(template,
-                              os.path.join(self.root, f"step_{step:010d}"))
+        directory = os.path.join(self.root, f"step_{step:010d}")
+        specs = read_layout_specs(directory)
+        if specs and sharding_tree is None:
+            # layout-staged checkpoint: keep shards physical and route the
+            # un-staging relayout (at-rest tiled -> logical) through the
+            # plane, so the restore DMA is priced/traced like the save was
+            tree = restore_pytree(template, directory, physical=True)
+
+            def unstage(path, a, t):
+                lay = specs.get(_path_key(path))
+                td = getattr(t, "dtype", None)
+                if lay is None:
+                    return self._stage(a, td)
+                a = jnp.asarray(a)
+                cast = None
+                if (td is not None and jnp.dtype(td) != a.dtype
+                        and jnp.issubdtype(a.dtype, jnp.floating)
+                        and jnp.issubdtype(td, jnp.floating)):
+                    cast = jnp.dtype(td).name
+                return xdma.transfer(a, _unstage_desc(lay, cast))
+
+            return jax.tree_util.tree_map_with_path(unstage, tree, template)
+        tree = restore_pytree(template, directory)
         if sharding_tree is not None:
             # cast on the actual snapshot-vs-template mismatch (the manager
             # that saved the checkpoint may have used a stage_dtype this one

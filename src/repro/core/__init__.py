@@ -1,9 +1,9 @@
 """repro.core — XDMA: layout-flexible data movement as a composable JAX module."""
 from .layouts import (  # noqa: F401
     Layout, MN, NM, MNP64, MNM8N128, MNM16N128, MNM32N128, MNM8N8,
-    NMM8N128, KV4M8N128,
+    NMM8N128, KV4M8N128, AUTO,
     affine_pattern, AffinePattern, PatternPair, relayout_pair,
-    layout_for_dtype, by_name,
+    layout_for_dtype, tiled_layout, by_name,
 )
 from .plugins import (  # noqa: F401
     Plugin, Identity, Transpose, Cast, Scale, BiasAdd,
@@ -15,6 +15,8 @@ from .descriptor import (  # noqa: F401
     Endpoint, XDMADescriptor, describe, reduce_descriptor,
     page_layout, page_descriptor,
 )
+from . import autotune  # noqa: F401  (best_layout, resolve_descriptor, ...)
+from .autotune import best_layout, resolve_descriptor, autotune_stats  # noqa: F401
 from .engine import xdma_copy, xdma_copy_jit, xdma_copy_pallas, reader, writer  # noqa: F401
 from .remote import (  # noqa: F401
     xdma_ppermute, xdma_all_to_all, xdma_psum, compressed_psum,

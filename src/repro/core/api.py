@@ -39,6 +39,7 @@ from jax import lax
 
 from repro.runtime import telemetry as _tm
 
+from . import autotune as _autotune
 from . import engine
 from . import plugin_compiler
 from . import plugins as P
@@ -140,6 +141,8 @@ def _evict_to_capacity() -> None:
 # cannot leave a stale composition that silently bypasses a freshly cleared
 # CFG cache.
 _AUX_CACHES: List["collections.OrderedDict"] = []
+_AUX_CACHES.append(_autotune._CACHE)      # memoized layout searches
+_AUX_CACHES.append(_autotune._RESOLVED)   # memoized auto-descriptor resolutions
 
 
 def clear_cache() -> None:
@@ -147,6 +150,22 @@ def clear_cache() -> None:
     _BANK.clear()
     for aux in _AUX_CACHES:
         aux.clear()
+
+
+def _resolve_auto(desc: XDMADescriptor, x, link=None) -> XDMADescriptor:
+    """Substitute tuned concrete layouts for ``auto`` endpoints against the
+    input buffer (the Data phase needs a concrete descriptor to dispatch).
+    An auto *src* treats the buffer as already logical — the pick there is
+    which physical walk to stream it with.  ``link`` is the fabric the
+    movement rides (the scheduler threads its routed link in; plain
+    ``transfer`` tunes for the default fabric)."""
+    if not desc.has_auto:
+        return desc
+    leaf = x.values if isinstance(x, (P.QTensor, P.CTensor)) else x
+    shape = tuple(int(s) for s in leaf.shape)
+    if not desc.src.layout.is_auto:
+        shape = desc.src.layout.logical_shape(shape)
+    return _autotune.resolve_descriptor(desc, shape, leaf.dtype, link=link)
 
 
 def _compiled_or(desc: XDMADescriptor, interpret: bool,
@@ -291,6 +310,7 @@ def transfer(x: jnp.ndarray, desc: XDMADescriptor, *,
     additionally timed as an ``xdma.transfer`` span.  Both hooks are a
     single ``is None`` check when off.
     """
+    desc = _resolve_auto(desc, x)
     tel = _tm._ACTIVE
     if tel is None:
         out = _lowered(desc, interpret)(x)
@@ -360,27 +380,36 @@ class XDMAQueue:
         return dtype
 
     # -- execution ----------------------------------------------------------
-    def _task(self, i: int, interpret: bool) -> Callable:
+    def _task(self, i: int, interpret: bool,
+              desc: Optional[XDMADescriptor] = None) -> Callable:
         # Queue-local memo (not the global CFG cache): queues are routinely
         # rebuilt per trace inside shard_map bodies, and id-keyed global
         # entries would accumulate; the queue's own lifetime bounds these.
-        fn = self._tasks.get((i, interpret))
+        # Auto descriptors resolve per input shape, so their resolved form
+        # joins the key (resolve_descriptor memoizes, keeping ids stable).
+        base = self._descs[i]
+        if desc is None:
+            desc = base
+        key = ((i, interpret) if desc is base
+               else (i, interpret, desc.cache_key()))
+        fn = self._tasks.get(key)
         if fn is None:
-            fn = _lower(self._descs[i], interpret)
-            self._tasks[(i, interpret)] = fn
+            fn = _lower(desc, interpret)
+            self._tasks[key] = fn
         return fn
 
     def run_task(self, x, i: int, *, interpret: bool = True):
         """Dispatch task ``i`` alone (in-order use is the caller's contract)."""
+        desc = _resolve_auto(self._descs[i], x)
         tel = _tm._ACTIVE
         if tel is None:
-            out = self._task(i, interpret)(x)
+            out = self._task(i, interpret, desc)(x)
         else:
             with tel.span("XDMAQueue.run_task", track="queue",
                           queue=self.name, task=i):
-                out = self._task(i, interpret)(x)
+                out = self._task(i, interpret, desc)(x)
         if _CAPTURE is not None:
-            _CAPTURE.record_transfer(x, self._descs[i], out, source="queue",
+            _CAPTURE.record_transfer(x, desc, out, source="queue",
                                      label=f"{self.name}[{i}]")
         return out
 
@@ -394,10 +423,11 @@ class XDMAQueue:
 
             def chain(v):
                 for i, d in enumerate(descs):
+                    d = _resolve_auto(d, v)            # concrete per trace
                     if d.movement == "local" and d.backend != "pallas":
                         v = engine.xdma_copy(v, d)     # fuse into the chain
                     else:
-                        v = self._task(i, interpret)(v)
+                        v = self._task(i, interpret, d)(v)
                 return v
 
             fused = jax.jit(chain) if self.is_local else chain

@@ -189,6 +189,13 @@ class XDMADescriptor:
         return self.movement != _LOCAL
 
     @property
+    def has_auto(self) -> bool:
+        """True when either endpoint carries the ``auto`` layout placeholder
+        — resolved per (shape, dtype, link) by
+        :func:`repro.core.autotune.resolve_descriptor` before lowering."""
+        return self.src.layout.is_auto or self.dst.layout.is_auto
+
+    @property
     def remote(self) -> Optional[Endpoint]:
         if self.dst.is_remote:
             return self.dst
@@ -334,30 +341,28 @@ def reduce_descriptor(axis, axis_size: int, *,
 def page_layout(rows: int, cols: int, dtype_name: str) -> L.Layout:
     """Page-resident physical layout for a (rows, cols) KV page.
 
-    Iris-style automatic layout selection, per page: among the
-    accelerator-native tiled candidates whose tiles divide the page geometry,
-    pick the one whose store relayout (``MN -> candidate``) has the longest
-    contiguous burst under the :func:`~repro.core.layouts.relayout_pair`
-    cost model — the dtype-native VREG tiling when it fits, the paper's
-    (8, 8) GeMM-array tile for narrow pages, plain ``MN`` when nothing
-    tile-aligned fits.  Strict-max keeps the dtype-native candidate on ties.
+    Iris-style automatic layout selection, per page, through the cost-model
+    autotuner (:func:`repro.core.autotune.best_layout`) over the
+    accelerator-native tiled candidate pool: the candidate whose store
+    relayout (``MN -> candidate``) is cheapest under the link cost model —
+    the dtype-native VREG tiling when it fits, the paper's (8, 8) GeMM-array
+    tile for narrow pages, plain ``MN`` when nothing tile-aligned fits.
+    The restricted candidate pool (not the autotuner's full generated space)
+    keeps picks bit-identical to the historical strict-max-burst rule, so
+    serving token streams are unchanged; strict ``<`` scoring keeps the
+    dtype-native candidate on ties.
     """
     import jax.numpy as jnp
 
+    from . import autotune as _at
+
     rows, cols = int(rows), int(cols)
     native = L.layout_for_dtype(jnp.dtype(dtype_name))
-    candidates = [native] + [l for l in (L.MNM8N128, L.MNM16N128,
-                                         L.MNM32N128, L.MNM8N8)
-                             if l is not native]
-    best, best_burst = L.MN, None
-    for cand in candidates:
-        tm, tn = cand.tile
-        if rows % tm or cols % tn:
-            continue
-        burst = L.relayout_pair(L.MN, cand, (rows, cols)).burst_length()
-        if best_burst is None or burst > best_burst:
-            best, best_burst = cand, burst
-    return best
+    candidates = (native,) + tuple(l for l in (L.MNM8N128, L.MNM16N128,
+                                               L.MNM32N128, L.MNM8N8)
+                                   if l is not native)
+    best = _at.best_layout((rows, cols), dtype_name, candidates=candidates)
+    return best or L.MN
 
 
 @functools.lru_cache(maxsize=None)

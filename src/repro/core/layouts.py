@@ -33,6 +33,7 @@ On TPU the native tiles follow the VREG/MXU geometry — (8, 128) f32,
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional, Sequence, Tuple
 
@@ -50,11 +51,13 @@ __all__ = [
     "MNM8N8",
     "NMM8N128",
     "KV4M8N128",
+    "AUTO",
     "affine_pattern",
     "AffinePattern",
     "PatternPair",
     "relayout_pair",
     "layout_for_dtype",
+    "tiled_layout",
     "by_name",
 ]
 
@@ -108,6 +111,12 @@ class Layout:
             if any(p < 0 for p in pad):
                 raise ValueError(f"bad pad {self.pad}")
             set_("pad", pad if any(pad) else None)
+
+    @property
+    def is_auto(self) -> bool:
+        """True for the ``AUTO`` placeholder: resolved to a concrete layout by
+        the cost-model autotuner (``repro.core.autotune``) before lowering."""
+        return self.name == "auto"
 
     @property
     def is_tiled(self) -> bool:
@@ -305,8 +314,13 @@ MNP64 = Layout(None, "MNP64", pad=(0, 64))  # padded row stride (KV alloc granul
 NMM8N128 = Layout((8, 128), "NMM8N128", perm=(1, 0, 2, 3))  # column-major tile grid
 KV4M8N128 = Layout((4, 8, 128), "KV4M8N128")  # rank-3 tile (KV-cache/MoE buffers)
 
+# Placeholder resolved per (shape, dtype, fabric) by repro.core.autotune; it
+# behaves as MN if it ever reaches a pattern export unresolved (benign: values
+# are correct, just untuned).
+AUTO = Layout(None, "auto")
+
 _BY_NAME = {l.name: l for l in (MN, MNM8N128, MNM16N128, MNM32N128, MNM8N8,
-                                NM, MNP64, NMM8N128, KV4M8N128)}
+                                NM, MNP64, NMM8N128, KV4M8N128, AUTO)}
 
 
 def by_name(name: str) -> Layout:
@@ -314,6 +328,55 @@ def by_name(name: str) -> Layout:
         return _BY_NAME[name]
     except KeyError:
         raise KeyError(f"unknown layout {name!r}; known: {sorted(_BY_NAME)}") from None
+
+
+def tiled_layout(*tile: int, grid_colmajor: bool = False,
+                 tile_transposed: bool = False,
+                 pad_last: int = 0) -> Layout:
+    """Interning constructor for tiled layouts: structurally equal tilings are
+    the *same object*, so CFG-cache keys built from descriptors dedupe.
+
+    ``tiled_layout(8, 128)`` is the canonical ``MNM8N128`` object; generated
+    tiles get systematic names (rank-2 ``MNM{tm}N{tn}``, rank-3
+    ``KV{tb}M{tm}N{tn}``, with ``NM`` prefix for a column-major grid, ``T``
+    suffix for swapped tile dims, ``P{p}`` for a padded last logical dim).
+    """
+    tile = tuple(int(t) for t in tile)
+    while len(tile) > 2 and tile[0] == 1:   # (1, tm, tn) tiles ARE (tm, tn)
+        tile = tile[1:]
+    # normalize BEFORE the memo so (1, tm, tn) interns to the (tm, tn) object
+    return _tiled_layout(tile, bool(grid_colmajor), bool(tile_transposed),
+                         int(pad_last))
+
+
+@functools.lru_cache(maxsize=None)
+def _tiled_layout(tile: Tuple[int, ...], grid_colmajor: bool,
+                  tile_transposed: bool, pad_last: int) -> Layout:
+    if not 2 <= len(tile) <= 3:
+        raise ValueError(f"tiled_layout takes a rank-2/3 tile, got {tile}")
+    if len(tile) == 3:
+        tb, tm, tn = tile
+        name = f"KV{tb}M{tm}N{tn}"
+    else:
+        tm, tn = tile
+        name = f"M{tm}N{tn}"
+    rank = len(tile)
+    perm = None
+    if grid_colmajor or tile_transposed:
+        if rank != 2:
+            raise ValueError("perm variants are rank-2 only")
+        grid = (1, 0) if grid_colmajor else (0, 1)
+        tl = (3, 2) if tile_transposed else (2, 3)
+        perm = grid + tl
+    prefix = "NM" if grid_colmajor else ("MN" if rank == 2 else "")
+    name = prefix + name + ("T" if tile_transposed else "")
+    pad = (0,) * (rank - 1) + (int(pad_last),) if pad_last else None
+    if pad_last:
+        name += f"P{int(pad_last)}"
+    canonical = _BY_NAME.get(name)
+    if canonical is not None and not canonical.is_auto:
+        return canonical
+    return Layout(tile, name, perm=perm, pad=pad)
 
 
 def layout_for_dtype(dtype) -> Layout:

@@ -46,8 +46,7 @@ def untile_block(blk: jnp.ndarray) -> jnp.ndarray:
 
 
 def _tiled(tile_shape: Tuple[int, int]) -> L.Layout:
-    tm, tn = tile_shape
-    return L.Layout((int(tm), int(tn)), f"MNM{tm}N{tn}")
+    return L.tiled_layout(*tile_shape)
 
 
 def tile(x: jnp.ndarray, tile_shape: Tuple[int, int], *, d_buf: int = 9,

@@ -283,9 +283,11 @@ class DistributedScheduler:
                 tenant="") -> XDMAFuture:
         if not isinstance(desc, XDMADescriptor):
             raise TypeError(f"submit takes a descriptor, got {type(desc)}")
+        resource = self._route(desc, link)
+        desc = self._resolve_auto(desc, x, resource)
         tid = self._next_id
         self._next_id += 1
-        task = _Task(id=tid, kind="xdma", resource=self._route(desc, link),
+        task = _Task(id=tid, kind="xdma", resource=resource,
                      deps=self._dep_ids((x,), deps), desc=desc, inputs=(x,),
                      nbytes=nbytes, label=label or desc.summary(),
                      tenant=tenant, csr_writes=1)
@@ -336,6 +338,27 @@ class DistributedScheduler:
             task.trace = cap
         return fut
 
+    def _resolve_auto(self, desc: XDMADescriptor, x: Any,
+                      resource: str) -> XDMADescriptor:
+        """Thread the *routed link* into the layout autotuner: an ``auto``
+        endpoint tunes for the fabric the task actually rides (DESIGN.md
+        §13), so the same descriptor picks differently on a wide-beat link
+        than on a narrow one.  Future inputs defer to dispatch time — their
+        shape is unknown until the producer retires."""
+        if (desc is None or not desc.has_auto
+                or isinstance(x, XDMAFuture)):
+            return desc
+        leaf = getattr(x, "values", x)          # QTensor/CTensor payloads
+        if getattr(leaf, "shape", None) is None \
+                or getattr(leaf, "dtype", None) is None:
+            return desc
+        link = (self.topology.link(resource)
+                if resource in self.topology else None)
+        try:
+            return _api._resolve_auto(desc, x, link)
+        except ValueError:
+            return desc                          # lowering reports the error
+
     # -- dispatch ------------------------------------------------------------
     def _resolve(self, obj: Any) -> Any:
         if isinstance(obj, XDMAFuture):
@@ -385,6 +408,11 @@ class DistributedScheduler:
     def _dispatch_round(self, ready: List[_Task]) -> None:
         inputs = [self._resolve(t.inputs[0]) if t.inputs else None
                   for t in ready]
+        for i, t in enumerate(ready):
+            # auto descriptors fed by futures resolve here, against the
+            # producer's now-known output and the task's routed link
+            if t.kind == "xdma" and t.desc is not None and t.desc.has_auto:
+                t.desc = self._resolve_auto(t.desc, inputs[i], t.resource)
         batch = [i for i, t in enumerate(ready)
                  if self._batchable(t, inputs[i])]
         if len(batch) > 1:

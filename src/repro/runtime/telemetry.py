@@ -313,6 +313,7 @@ def snapshot() -> Dict[str, Any]:
         return {}
     # lazy imports: the legacy surfaces live in modules that import *us*
     from repro.core import api as _api
+    from repro.core import autotune as _at
     from repro.core import plugin_compiler as _pc
     from repro.kernels import agu as _agu
 
@@ -321,6 +322,7 @@ def snapshot() -> Dict[str, Any]:
         "cache_stats": {"hits": cs.hits, "misses": cs.misses,
                         "evictions": cs.evictions, "size": cs.size},
         "agu_stats": _agu.agu_stats(),
+        "autotune_stats": _at.autotune_stats(),
         "cfg_stats": _pc.cfg_stats(),
         "scheduler_links": bank("links").as_dict(),
         "scheduler_rings": bank("rings").as_dict(),

@@ -29,8 +29,9 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import (MN, Endpoint, Layout, RMSNormPlugin, Transpose,
-                        XDMAQueue, describe, layout_for_dtype, xdma, xdma_copy)
+from repro.core import (MN, Endpoint, RMSNormPlugin, Transpose, XDMAQueue,
+                        autotune, describe, layout_for_dtype, tiled_layout,
+                        xdma, xdma_copy)
 
 
 def _as_matrix(kv: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
@@ -63,8 +64,7 @@ def kv_prefill_store(kv: jnp.ndarray, *, norm_weight=None, d_buf: int = 9,
 
 @functools.lru_cache(maxsize=None)
 def _load_desc(tm: int, tn: int, d_buf: int):
-    layout = Layout((tm, tn), f"MNM{tm}N{tn}")
-    return describe(layout, MN, Transpose(), d_buf=d_buf)
+    return describe(tiled_layout(tm, tn), MN, Transpose(), d_buf=d_buf)
 
 
 def kv_load_transposed(tiled: jnp.ndarray, *, d_buf: int = 9) -> jnp.ndarray:
@@ -94,11 +94,15 @@ def kv_plane_descs(S: int, d: int, dtype_name: str):
     shard is tile-aligned (the paper's Prefill-store / Load workloads; the
     pair is an exact inverse), a plain copy otherwise.  Unlike
     ``kv_prefill_store``/``kv_load_transposed`` these never transform values,
-    so the engine can thread the moved cache straight back into decode."""
+    so the engine can thread the moved cache straight back into decode.
+
+    The at-rest tile comes from the cost-model autotuner over the
+    dtype-native candidate (feasibility == tile alignment, so the pair is
+    bit-identical to the historical ``S % tm == 0 and d % tn == 0`` rule)."""
     dtype = jnp.dtype(dtype_name)
-    tiled = layout_for_dtype(dtype)
-    tm, tn = tiled.tile
-    if S % tm == 0 and d % tn == 0:
+    tiled = autotune.best_layout((int(S), int(d)), dtype,
+                                 candidates=(layout_for_dtype(dtype),))
+    if tiled is not None:
         return describe(MN, tiled, d_buf=9), describe(tiled, MN, d_buf=9)
     return describe(MN, MN), describe(MN, MN)
 

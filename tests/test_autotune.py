@@ -1,0 +1,273 @@
+"""Cost-model layout autotuner (DESIGN.md §13): search, cache, `auto` spelling.
+
+Pins the PR-9 acceptance criteria: the tuned pick matches or beats every
+hand-picked layout of the PR-4 relayout sweep under the link cost model
+(strictly beating at least one), finds a strictly-better-than-all-named pick
+on a rank-3 case, keeps ``page_layout`` bit-identical to the historical
+strict-max-burst rule, resolves ``auto`` descriptors value-exactly through
+``transfer``/``XDMAQueue``/``DistributedScheduler``, and honours the shared
+``clear_cache()`` discipline.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import given, settings, st  # hypothesis or skip-shim
+
+from repro.core import (MN, NM, Transpose, XDMAQueue, clear_cache, describe,
+                        layout_for_dtype, tiled_layout, xdma)
+from repro.core import autotune as at
+from repro.core import layouts as L
+from repro.core.descriptor import page_layout
+from repro.runtime.topology import Link
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_cache()
+    yield
+    clear_cache()
+
+
+# -- satellite: one interning tiled_layout constructor -----------------------
+def test_tiled_layout_interns_named_layouts():
+    assert tiled_layout(8, 128) is L.MNM8N128
+    assert tiled_layout(16, 128) is L.MNM16N128
+    assert tiled_layout(32, 128) is L.MNM32N128
+    assert tiled_layout(8, 8) is L.MNM8N8
+    assert tiled_layout(8, 128, grid_colmajor=True) is L.NMM8N128
+    assert tiled_layout(4, 8, 128) is L.KV4M8N128
+
+
+def test_tiled_layout_generated_names_self_intern():
+    a = tiled_layout(8, 48)
+    assert a is tiled_layout(8, 48)
+    assert a.name == "MNM8N48"
+    assert tiled_layout(1, 8, 48) is a          # unit batch tile IS the 2D tile
+
+
+# -- the relayout sweep: tuned picks match or beat every hand pick ------------
+SWEEP_SHAPE = (512, 512)
+SWEEP_CASES = [
+    # (name, movements with the hand-picked side as the candidate slot)
+    ("tile", (at.Movement(L.MN, "dst"),)),
+    ("untile", (at.Movement(L.MN, "src"),)),
+    ("tiled_transpose", (at.Movement(L.MNM8N128, "dst", transpose=True),)),
+    ("mn_transpose", (at.Movement(L.MN, "dst", transpose=True),)),
+]
+
+
+@pytest.mark.parametrize("name,movements", SWEEP_CASES,
+                         ids=[c[0] for c in SWEEP_CASES])
+def test_autotuned_matches_or_beats_hand_pick(name, movements):
+    hand = L.layout_for_dtype(jnp.float32)      # the sweep's hand pick
+    result = at.autotune(SWEEP_SHAPE, jnp.float32, movements=movements)
+    hand_cost = at.layout_cost(hand, SWEEP_SHAPE, jnp.float32, movements,
+                               at.DEFAULT_LINK)
+    assert result.layout is not None
+    assert result.cost <= hand_cost
+
+
+def test_autotuned_strictly_beats_hand_tile_store():
+    """The tile workload (MN -> hand-tiled store): identity MN streams the
+    whole buffer as one burst, so the tuned pick is strictly cheaper."""
+    movements = (at.Movement(L.MN, "dst"),)
+    result = at.autotune(SWEEP_SHAPE, jnp.float32, movements=movements)
+    hand_cost = at.layout_cost(L.MNM8N128, SWEEP_SHAPE, jnp.float32,
+                               movements, at.DEFAULT_LINK)
+    assert result.cost < hand_cost
+
+
+def test_rank3_tiled_search_beats_every_named_layout():
+    """Acceptance: on a rank-3 batched buffer the lattice search finds a
+    generated tile strictly cheaper than every feasible *named* layout."""
+    shape, dtype = (6, 48, 48), jnp.float32
+    result = at.autotune(shape, dtype, tiled_only=True)
+    assert result.layout is not None
+    with pytest.raises((KeyError, ValueError)):
+        L.by_name(result.layout.name)           # a generated pick, not named
+    named = [L.MNM8N128, L.MNM16N128, L.MNM32N128, L.MNM8N8, L.NMM8N128,
+             L.KV4M8N128]
+    movements = (at.Movement(L.MN, "dst"),)
+    named_costs = [at.layout_cost(lay, shape, dtype, movements,
+                                  at.DEFAULT_LINK) for lay in named]
+    feasible = [c for c in named_costs if np.isfinite(c)]
+    assert feasible, "at least one named layout must fit the shape"
+    assert result.cost < min(feasible)
+
+
+def test_beam_search_prunes_large_lattices():
+    result = at.autotune((512, 512), jnp.float32, tiled_only=True, budget=24)
+    assert result.pruned > 0
+    assert result.scored <= 24 + at.BEAM_WIDTH
+
+
+# -- fabric sensitivity: the link is part of the pick -------------------------
+def test_fabric_width_flips_the_pick():
+    """On a pipelineless link the burst-granular model makes beat alignment
+    decide: a 96B-beat fabric prefers the 24-lane tile, a 64B one the
+    16-lane tile."""
+    cands = (tiled_layout(8, 16), tiled_layout(8, 24))
+    wide = Link("wide", "a", "b", width=96, burst_overhead=0.0)
+    narrow = Link("narrow", "a", "b", width=64, burst_overhead=0.0)
+    pick_w = at.best_layout((64, 48), jnp.float32, candidates=cands, link=wide)
+    pick_n = at.best_layout((64, 48), jnp.float32, candidates=cands,
+                            link=narrow)
+    assert pick_w.name == "MNM8N24"
+    assert pick_n.name == "MNM8N16"
+
+
+# -- determinism + the memo ---------------------------------------------------
+def test_same_key_same_pick_and_cache_hit():
+    before = at.autotune_stats()
+    r1 = at.autotune((64, 48), jnp.float32)
+    r2 = at.autotune((64, 48), jnp.float32)
+    after = at.autotune_stats()
+    assert r1 is r2                             # the memoized result object
+    assert after["cache_hits"] == before["cache_hits"] + 1
+    assert after["searches"] == before["searches"] + 1
+
+
+def test_clear_cache_drops_autotune_memos():
+    at.autotune((64, 48), jnp.float32)
+    xdma.transfer(jnp.ones((8, 8), jnp.float32), describe(MN, "auto"))
+    assert len(at._CACHE) > 0 and len(at._RESOLVED) > 0
+    clear_cache()                               # the shared CFG-cache sweep
+    assert len(at._CACHE) == 0 and len(at._RESOLVED) == 0
+
+
+def test_autotune_stats_surface_in_snapshot():
+    from repro.runtime import telemetry as tm
+    with tm.session(name="s"):
+        at.autotune((64, 48), jnp.float32)
+        snap = tm.snapshot()
+    stats = snap["surfaces"]["autotune_stats"]
+    assert stats["searches"] >= 1
+    assert stats["candidates_scored"] >= 1
+
+
+# -- page_layout parity: autotuner picks == historical strict-max-burst -------
+def _page_layout_reference(rows, cols, dtype_name):
+    """The pre-autotuner algorithm, verbatim: strict-max store burst over the
+    named tiled candidates, dtype-native first on ties, MN fallback."""
+    native = L.layout_for_dtype(jnp.dtype(dtype_name))
+    candidates = [native] + [l for l in (L.MNM8N128, L.MNM16N128,
+                                         L.MNM32N128, L.MNM8N8)
+                             if l is not native]
+    best, best_burst = L.MN, None
+    for cand in candidates:
+        tm, tn = cand.tile
+        if rows % tm or cols % tn:
+            continue
+        burst = L.relayout_pair(L.MN, cand, (rows, cols)).burst_length()
+        if best_burst is None or burst > best_burst:
+            best, best_burst = cand, burst
+    return best
+
+
+@pytest.mark.parametrize("dtype_name", ["float32", "bfloat16", "int8"])
+def test_page_layout_bit_identical_to_historical_rule(dtype_name):
+    for rows in (8, 16, 31, 32, 48, 64, 96, 128, 256):
+        for cols in (7, 8, 16, 64, 128, 256):
+            got = page_layout(rows, cols, dtype_name)
+            want = _page_layout_reference(rows, cols, dtype_name)
+            assert got is want, (rows, cols, dtype_name, got.name, want.name)
+
+
+def test_kv_plane_descs_match_historical_alignment_rule():
+    from repro.serving.transfer import kv_plane_descs
+    for S, d in [(64, 512), (64, 48), (31, 512), (64, 100)]:
+        store, load = kv_plane_descs(S, d, "float32")
+        tiled = L.layout_for_dtype(jnp.float32)
+        tm, tn = tiled.tile
+        if S % tm == 0 and d % tn == 0:         # the historical rule
+            assert store.dst.layout is tiled and load.src.layout is tiled
+        else:
+            assert store.dst.layout is L.MN and load.src.layout is L.MN
+
+
+# -- the `auto` spelling: value-exact resolution ------------------------------
+def test_transfer_with_auto_dst_is_value_exact():
+    x = jnp.arange(64 * 48, dtype=jnp.float32).reshape(64, 48)
+    d = describe(MN, "auto")
+    assert d.has_auto and d.dst.layout.is_auto
+    y = xdma.transfer(x, d)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_auto_src_resolves_to_mn_never_reinterprets():
+    """Auto on src must not reinterpret the caller's bytes: the transposed
+    load through an auto src returns exactly x.T."""
+    x = jnp.arange(64 * 48, dtype=jnp.float32).reshape(64, 48)
+    y = xdma.transfer(x, describe("auto", MN, Transpose()))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x).T)
+    r = at.resolve_descriptor(describe("auto", MN), (64, 48), jnp.float32)
+    assert r.src.layout is L.MN
+
+
+def test_auto_dst_transposed_store_keeps_logical_values():
+    x = jnp.arange(64 * 48, dtype=jnp.float32).reshape(64, 48)
+    desc = describe(MN, "auto", Transpose())
+    resolved = at.resolve_descriptor(desc, (64, 48), jnp.float32)
+    y = xdma.transfer(x, desc)
+    np.testing.assert_array_equal(
+        np.asarray(resolved.dst.layout.to_logical(y)), np.asarray(x).T)
+
+
+def test_queue_resolves_auto_per_task():
+    x = jnp.arange(64 * 48, dtype=jnp.float32).reshape(64, 48)
+    q = XDMAQueue([describe(MN, "auto"), describe("auto", MN, Transpose())],
+                  name="auto-q")
+    out = q.run(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x).T)
+    np.testing.assert_array_equal(np.asarray(q.run_task(x, 0)), np.asarray(x))
+
+
+def test_resolution_is_memoized_per_shape_and_fabric():
+    d = describe(MN, "auto")
+    r1 = at.resolve_descriptor(d, (64, 48), jnp.float32)
+    r2 = at.resolve_descriptor(d, (64, 48), jnp.float32)
+    r3 = at.resolve_descriptor(d, (48, 64), jnp.float32)
+    assert r1 is r2                             # same resolved object (CFG hit)
+    assert r3 is not r1
+
+
+# -- scheduler: the routed link reaches the search ----------------------------
+def test_scheduler_threads_routed_link_into_autotune():
+    from repro.runtime import DistributedScheduler, Topology
+    topo = Topology(name="flip")
+    topo.add_link("a", "b", name="wide", width=96)
+    sched = DistributedScheduler(topo)
+    x = jnp.arange(64 * 48, dtype=jnp.float32).reshape(64, 48)
+    f = sched.submit(x, describe(MN, "auto"), link="wide")
+    f2 = sched.submit(f, describe("auto", MN), link="wide")  # future-fed
+    sched.flush()
+    np.testing.assert_array_equal(np.asarray(f2.result()), np.asarray(x))
+    assert not sched._tasks[f.task_id].desc.has_auto   # submit-time resolve
+    assert not sched._tasks[f2.task_id].desc.has_auto  # dispatch-time resolve
+    fingerprints = {key[2] for key in at._CACHE}
+    assert at.fabric_fingerprint(topo.link("wide")) in fingerprints
+
+
+# -- property: the tuned pick never loses to the MN default -------------------
+@st.composite
+def autotune_case(draw):
+    g = draw(st.sampled_from([(jnp.float32, 8), (jnp.bfloat16, 16),
+                              (jnp.int8, 32)]))
+    dtype, granule = g
+    m = draw(st.integers(1, 8)) * granule
+    n = draw(st.integers(1, 6)) * 8
+    width = draw(st.sampled_from([32, 64, 96, 128]))
+    overhead = draw(st.sampled_from([0.0, 5e-8]))
+    transpose = draw(st.booleans())
+    return dtype, (m, n), width, overhead, transpose
+
+
+@given(autotune_case())
+@settings(max_examples=25, deadline=None)
+def test_autotuned_cost_never_worse_than_default(case):
+    dtype, shape, width, overhead, transpose = case
+    link = Link("prop", "a", "b", width=width, burst_overhead=overhead)
+    movements = (at.Movement(L.MN, "dst", transpose),)
+    result = at.autotune(shape, dtype, movements=movements, link=link)
+    assert result.layout is not None
+    assert result.cost <= result.default_cost

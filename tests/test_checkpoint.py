@@ -100,3 +100,60 @@ def test_train_resume_exact(tmp_path):
     assert abs(loss_full - loss_res) < 1e-5
     for a, b in zip(jax.tree.leaves(full["params"]), jax.tree.leaves(resumed["params"])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+# -- at-rest layout staging (DESIGN.md §13: autotuned checkpoint layouts) -----
+def test_auto_layout_staging_roundtrip(tmp_path):
+    from repro.checkpoint.manager import read_layout_specs
+
+    t = {"w": jnp.arange(64 * 48, dtype=jnp.float32).reshape(64, 48),
+         "b": jnp.arange(48, dtype=jnp.float32),
+         "e": jnp.ones((16, 128), jnp.bfloat16),
+         "odd": jnp.ones((31, 7), jnp.float32)}       # nothing tiles it
+    m = CheckpointManager(str(tmp_path), stage_layout="auto")
+    m.save(1, t)
+    specs = read_layout_specs(str(tmp_path / "step_0000000001"))
+    assert "w" in specs and specs["w"].tile is not None   # a tiled at-rest pick
+    assert "odd" not in specs                             # fell back to plain
+    back = m.restore(1, jax.eval_shape(lambda: t))
+    assert_tree_equal(t, back)                            # bit-exact roundtrip
+    for k in t:
+        assert jnp.asarray(back[k]).dtype == t[k].dtype
+
+
+def test_layout_staged_checkpoint_readable_by_plain_manager(tmp_path):
+    """The layout spec lives in meta.json, so a manager (or restore_pytree
+    caller) that never heard of stage_layout still restores logically."""
+    t = {"w": jnp.arange(64 * 48, dtype=jnp.float32).reshape(64, 48)}
+    CheckpointManager(str(tmp_path), stage_layout="auto").save(1, t)
+    back = CheckpointManager(str(tmp_path)).restore(1, jax.eval_shape(lambda: t))
+    assert_tree_equal(t, back)
+    back2 = restore_pytree(jax.eval_shape(lambda: t),
+                           str(tmp_path / "step_0000000001"))
+    assert_tree_equal(t, back2)
+
+
+def test_layout_staging_with_downcast(tmp_path):
+    t = {"w": jnp.linspace(0.0, 1.0, 64 * 128, dtype=jnp.float32).reshape(64, 128)}
+    m = CheckpointManager(str(tmp_path), stage_dtype=jnp.bfloat16,
+                          stage_layout="auto")
+    m.save(1, t)
+    back = m.restore(1, jax.eval_shape(lambda: t))
+    w = jnp.asarray(back["w"])
+    assert w.dtype == jnp.float32                         # cast back on-stream
+    np.testing.assert_allclose(np.asarray(w), np.asarray(t["w"]),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_explicit_stage_layout(tmp_path):
+    from repro.checkpoint.manager import read_layout_specs
+    from repro.core import layouts as L
+
+    t = {"w": jnp.arange(32 * 128, dtype=jnp.float32).reshape(32, 128),
+         "odd": jnp.ones((10, 10), jnp.float32)}         # 128-tile cannot fit
+    m = CheckpointManager(str(tmp_path), stage_layout=L.MNM8N128)
+    m.save(1, t)
+    specs = read_layout_specs(str(tmp_path / "step_0000000001"))
+    assert specs["w"] is L.MNM8N128
+    assert "odd" not in specs
+    assert_tree_equal(t, m.restore(1, jax.eval_shape(lambda: t)))
