@@ -1,0 +1,84 @@
+"""Multicast trees vs N unicasts: the PR-10 point-to-multipoint headline.
+
+For each fabric preset the same broadcast — one payload from a source node
+to ``n`` destinations — is priced twice on the deterministic simulator:
+
+* ``multicast`` — one :meth:`~repro.runtime.topology.Topology
+  .multicast_tree` schedule (:func:`~repro.runtime.simulator
+  .multicast_sim_tasks`): every tree edge carries the payload once, forks
+  replicate at branch points, a hop serving several destinations is priced
+  once;
+* ``unicast``  — the N independent source-rooted paths
+  (:func:`~repro.runtime.simulator.unicast_sim_tasks`): exactly what N
+  ``submit()`` calls cost today, every path re-carrying the payload from
+  the source.
+
+Both schedules use the identical task construction (same per-hop pricing,
+same doorbell CSR writes), so the ratio isolates *tree sharing*: it must be
+strictly above 1.0 whenever the tree saves at least one hop (two
+destinations behind a shared edge) and exactly 1.0 when it saves none (the
+host-device star, where every destination is its own spoke) — never below.
+The module asserts that invariant on every row it emits.
+
+Rows: ``mcast/<fabric>/dst<n>/{multicast,unicast}`` = simulated makespan
+(us) with aggregate delivered GB/s as the derived column, and
+``.../ratio`` = unicast over multicast makespan (higher is better; the
+``multicast_vs_unicast_ratio`` rollup in the bench snapshot).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.runtime import Topology, multicast_sim_tasks, simulate, \
+    unicast_sim_tasks
+
+PAYLOAD = 1 << 20                       # 1 MiB per destination delivery
+
+
+def _fabrics():
+    """(tag, topology, src, dst-count sweep) per preset; destinations are
+    the nearest non-source nodes in node order (the scheduler's default)."""
+    return [
+        ("ring4", Topology.ring(4), "dev0", (2, 3)),
+        ("mesh2x2", Topology.tpu_mesh((2, 2)), "dev(0,0)", (2, 3)),
+        ("host_device", Topology.host_device(devices=4), "host", (2, 4)),
+    ]
+
+
+def _makespan(tasks, topo) -> float:
+    return simulate(tasks, topo).makespan
+
+
+def _rows() -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    for tag, topo, src, sweep in _fabrics():
+        dst_pool = [n for n in topo.nodes if n != src]
+        for n in sweep:
+            dsts = dst_pool[:n]
+            m_tasks, tree = multicast_sim_tasks(topo, src, dsts, PAYLOAD)
+            u_tasks = unicast_sim_tasks(topo, src, dsts, PAYLOAD)
+            m = _makespan(m_tasks, topo)
+            u = _makespan(u_tasks, topo)
+            ratio = u / m
+            # the acceptance invariant, enforced on every emitted row:
+            # sharing => strictly better, no sharing => exactly as good
+            if tree.saved_hops >= 1:
+                assert ratio > 1.0, (tag, n, ratio, tree.summary())
+            else:
+                assert abs(ratio - 1.0) < 1e-12, (tag, n, ratio)
+            agg = n * PAYLOAD
+            base = f"mcast/{tag}/dst{n}"
+            rows.append((f"{base}/multicast", m * 1e6, agg / m / 1e9))
+            rows.append((f"{base}/unicast", u * 1e6, agg / u / 1e9))
+            rows.append((f"{base}/ratio", m * 1e6, ratio))
+    return rows
+
+
+def run(csv: bool = True, sim: bool = True):
+    # both columns already come from the deterministic simulator, so --sim
+    # changes nothing; the flag keeps the CLI contract uniform
+    rows = _rows()
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.4f},{derived:.4f},")
+    return rows

@@ -17,7 +17,7 @@ In a full ``--sim`` sweep, sections with no simulator mode are *skipped* (a
 smoke run must stay cheap); ``--only SECTION --sim`` still runs that section
 for real if it has no sim mode.
 
-``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR9.json``):
+``--json [PATH]`` writes the perf snapshot (default ``BENCH_PR10.json``):
 measured relayout GB/s through the fused and generic-AGU Pallas backends,
 the simulated Fig. 4 per-link utilization sweep with the software-AGU vs
 Frontend ratio per traffic pattern, the scheduler rows with their contention
@@ -28,8 +28,10 @@ Fig. 11 end-to-end speedups, from ``benchmarks/apps.py``), the
 ``serving_load`` sweep (continuous vs static batching tokens/s and latency
 percentiles vs offered load, from ``benchmarks/serving_load.py``), and the
 ``autotune`` section (cost-model GB/s of autotuned vs hand-picked layouts
-over the relayout sweep, from ``benchmarks/autotune.py``).
-The snapshot is committed into the repo (``BENCH_PR9.json``) so the bench
+over the relayout sweep, from ``benchmarks/autotune.py``), and the
+``multicast`` section (simulated tree-routed broadcast vs N unicasts per
+fabric preset, from ``benchmarks/multicast.py``).
+The snapshot is committed into the repo (``BENCH_PR10.json``) so the bench
 trajectory diffs PR over PR; CI also uploads it as an artifact and diffs it
 against the previous snapshot with ``scripts/bench_diff.py``.
 """
@@ -48,6 +50,7 @@ SECTIONS = {
     "apps": ("apps", "captured application traces replayed per fabric (Fig. 11)"),
     "serving": ("serving_load", "continuous vs static batching vs offered load"),
     "autotune": ("autotune", "autotuned vs hand-picked layouts (cost model)"),
+    "multicast": ("multicast", "tree-routed multicast vs N unicasts per fabric"),
     "roofline": ("roofline", "dry-run roofline fractions"),
 }
 
@@ -125,11 +128,13 @@ def _cached_apps_rows(csv_path: str):
 
 
 def write_snapshot(path: str) -> None:
-    """The BENCH_PR9 perf snapshot: relayout GB/s, simulated utilization,
+    """The BENCH_PR10 perf snapshot: relayout GB/s, simulated utilization,
     the captured-application replay table, the serving-load sweep, the ring
-    plane's fairness/overload rollup, and the layout-autotuner comparison."""
+    plane's fairness/overload rollup, the layout-autotuner comparison, and
+    the multicast-vs-unicast fabric sweep."""
     from . import apps, link_utilization, sched, serving_load
     from . import autotune as autotune_bench
+    from . import multicast as multicast_bench
 
     import os
 
@@ -147,9 +152,10 @@ def write_snapshot(path: str) -> None:
         app_rows = apps.run(csv=False, sim=True)
     serving_rows = serving_load.run(csv=False)
     autotune_rows = autotune_bench.run(csv=False)
+    multicast_rows = multicast_bench.run(csv=False)
     gbps = relayout_gbps()
     payload = {
-        "bench": "PR9",
+        "bench": "PR10",
         "columns": {
             "relayout_gbps": ["name", "us_per_call", "gbytes_per_s"],
             "fig4sim": ["name", "simulated_us", "utilization_or_ratio"],
@@ -161,6 +167,7 @@ def write_snapshot(path: str) -> None:
                              "p99_us", "ttft_p50_us", "ttft_p99_us",
                              "tbt_p50_us", "tbt_p99_us"],
             "autotune": ["name", "model_cost_us", "gbytes_per_s_or_ratio"],
+            "multicast": ["name", "makespan_us", "gbytes_per_s_or_ratio"],
         },
         "sections": {
             "relayout_gbps": [list(r) for r in gbps],
@@ -169,6 +176,7 @@ def write_snapshot(path: str) -> None:
             "apps": [list(r) for r in app_rows],
             "serving_load": [list(r) for r in serving_rows],
             "autotune": [list(r) for r in autotune_rows],
+            "multicast": [list(r) for r in multicast_rows],
         },
         # the paper's headline comparison axis (Fig. 4): simulated link
         # utilization of Frontend (d_buf=9) over software address generation
@@ -202,6 +210,12 @@ def write_snapshot(path: str) -> None:
         "autotune_vs_handpicked_ratio": {
             r[0]: r[2] for r in autotune_rows if r[0].endswith("/ratio")
         },
+        # PR-10: simulated N-unicast over tree-multicast makespan per
+        # fabric x destination count (> 1.0 wherever the tree shares a hop,
+        # exactly 1.0 on the no-sharing star — never below)
+        "multicast_vs_unicast_ratio": {
+            r[0]: r[2] for r in multicast_rows if r[0].endswith("/ratio")
+        },
         "apps_rows_source": apps_source,
     }
     with open(path, "w") as f:
@@ -211,7 +225,8 @@ def write_snapshot(path: str) -> None:
           f"{len(payload['app_speedup_frontend_vs_sw'])} app speedups, "
           f"{len(payload['continuous_over_static_tokens_ratio'])} serving "
           f"ratios, {len(payload['ring_fairness'])} fairness rows, "
-          f"{len(payload['autotune_vs_handpicked_ratio'])} autotune ratios")
+          f"{len(payload['autotune_vs_handpicked_ratio'])} autotune ratios, "
+          f"{len(payload['multicast_vs_unicast_ratio'])} multicast ratios")
 
 
 def main() -> None:
@@ -223,7 +238,7 @@ def main() -> None:
                     help="list registered sections and exit")
     ap.add_argument("--sim", action="store_true",
                     help="simulator-only mode for sections that support it")
-    ap.add_argument("--json", nargs="?", const="BENCH_PR9.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_PR10.json", default=None,
                     metavar="PATH", help="write the perf snapshot and exit")
     args = ap.parse_args()
     if args.list:

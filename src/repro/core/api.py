@@ -14,6 +14,11 @@ descriptor alone* — to one of the lowering backends:
 * dst peer                    -> ``remote.xdma_ppermute``    (tunnel)
 * dst all_to_all              -> ``remote.xdma_all_to_all``  (MoE dispatch)
 * dst reduce                  -> ``remote.compressed_psum`` / ``lax.psum``
+* dst multicast (mesh-axis)   -> ``remote.xdma_ppermute``    (rotating hop)
+
+Node-addressed multicast (``Endpoint.multicast(dsts=...)``) is *not* a
+lowering: it is routed as a tree of per-hop local tasks by
+``DistributedScheduler.submit_multicast`` (DESIGN.md §14) and raises here.
 
 Remote movements additionally compile each endpoint side's chain into a
 single Pallas kernel when possible (``plugin_compiler.maybe_compile_side``).
@@ -210,8 +215,16 @@ def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
     # single Pallas kernel (reader+pre / post+writer); other sides keep the
     # composition the remote backends apply around the collective.
     ep = desc.remote
+    if movement == "multicast" and ep is None:
+        # node-addressed multicast has no single-collective lowering: the
+        # scheduler forks it into per-hop tree tasks
+        raise ValueError(
+            "node-addressed multicast descriptors are routed by "
+            "DistributedScheduler.submit_multicast (they fork into per-hop "
+            "tree tasks), not lowered by transfer(); use "
+            "Endpoint.multicast_axis for the mesh-axis collective spelling")
     src_side = dst_side = None
-    if movement in ("peer", "all_to_all"):
+    if movement in ("peer", "all_to_all", "multicast"):
         src_side = plugin_compiler.maybe_compile_side(
             desc.src.layout, desc.pre, side="src", d_buf=desc.d_buf,
             interpret=interpret)
@@ -233,7 +246,9 @@ def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
             if getattr(logical, "ndim", 0) >= 2:
                 desc.validate(logical.shape)
         post = desc.post if dst_side is None else ()
-        if movement == "peer":
+        if movement in ("peer", "multicast"):
+            # mesh-axis multicast is the rotating one-hop broadcast: the same
+            # collective permute as peer, recorded as multicast in the ledger
             y = remote.xdma_ppermute(logical, ep.axis, list(ep.perm),
                                      pre=pre, post=post)
         elif movement == "all_to_all":
@@ -264,7 +279,7 @@ def _lower(desc: XDMADescriptor, interpret: bool) -> Callable:
             y = P.apply_chain(post_rest, y)
         else:  # pragma: no cover - movement is validated by the descriptor
             raise ValueError(f"unknown movement {movement!r}")
-        if movement in ("peer", "all_to_all") and dst_side is not None:
+        if movement in ("peer", "all_to_all", "multicast") and dst_side is not None:
             if not isinstance(y, (P.QTensor, P.CTensor)):
                 return dst_side(y)           # one kernel: post chain + writer
             y = P.apply_chain(desc.post, y)  # pytree payload: composition

@@ -96,10 +96,15 @@ class AutotuneResult:
     pruned: int
 
 
-def fabric_fingerprint(link: Optional[Link]) -> Tuple[float, float, int, float]:
-    """The cost-model-relevant identity of a link (cache-key component)."""
+def fabric_fingerprint(
+        link: Optional[Link]) -> Tuple[float, float, int, float, float]:
+    """The cost-model-relevant identity of a link (cache-key component).
+    Includes ``csr_write_cost``: two fabrics differing only in doorbell
+    price must not share cache entries once multicast forks pay one CSR
+    write per tree hop."""
     l = link or DEFAULT_LINK
-    return (l.bandwidth, l.latency, l.width, l.burst_overhead)
+    return (l.bandwidth, l.latency, l.width, l.burst_overhead,
+            l.csr_write_cost)
 
 
 def movement_cost(link: Link, nbytes: int, burst_bytes: int, *,

@@ -31,8 +31,9 @@ _LOCAL = "local"
 _PEER = "peer"
 _ALL_TO_ALL = "all_to_all"
 _REDUCE = "reduce"
+_MULTICAST = "multicast"
 _REMOTE_KINDS = (_PEER, _ALL_TO_ALL, _REDUCE)
-_KINDS = (_LOCAL,) + _REMOTE_KINDS
+_KINDS = (_LOCAL,) + _REMOTE_KINDS + (_MULTICAST,)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +50,12 @@ class Endpoint:
       (``split_axis``/``concat_axis`` as in ``lax.all_to_all``).
     * ``reduce``      — an all-reduce rendezvous over ``axis`` with
       ``axis_size`` participants.
+    * ``multicast``   — point-to-multipoint (DESIGN.md §14): either
+      *node-addressed* (``dsts`` names topology nodes with per-destination
+      layouts; routed by :meth:`repro.runtime.Topology.multicast_tree` via
+      ``DistributedScheduler.submit_multicast``) or *mesh-axis* (``axis`` +
+      ``perm``, the rotating single-hop broadcast an all-gather is built
+      from; lowers like ``peer``).
 
     Remote endpoints still carry a ``layout``: it is the physical layout of
     the buffer at that end, applied by that side's Frontend reader/writer.
@@ -61,10 +68,27 @@ class Endpoint:
     split_axis: int = 0
     concat_axis: int = 0
     axis_size: Optional[int] = None
+    # multicast only: ((node, layout), ...) — each dst may carry its own
+    # physical layout, independently resolvable when spelled "auto"
+    dsts: Optional[Tuple[Tuple[str, L.Layout], ...]] = None
 
     def __post_init__(self):
         if self.kind not in _KINDS:
             raise ValueError(f"unknown endpoint kind {self.kind!r}; one of {_KINDS}")
+        if self.kind == _MULTICAST:
+            node_addressed = self.dsts is not None
+            mesh_addressed = self.axis is not None
+            if node_addressed == mesh_addressed:
+                raise ValueError(
+                    "multicast endpoint needs either dsts= (node-addressed, "
+                    "tree-routed) or axis=+perm= (mesh-axis), not both")
+            if node_addressed and not self.dsts:
+                raise ValueError("multicast endpoint needs >= 1 destination")
+            if mesh_addressed and self.perm is None:
+                raise ValueError("mesh-axis multicast needs a device permutation")
+        elif self.dsts is not None:
+            raise ValueError(f"dsts= only applies to multicast endpoints, "
+                             f"not {self.kind!r}")
         if self.is_remote and self.axis is None:
             raise ValueError(f"{self.kind!r} endpoint needs a mesh axis name")
         if self.kind == _PEER and self.perm is None:
@@ -74,7 +98,11 @@ class Endpoint:
 
     @property
     def is_remote(self) -> bool:
-        return self.kind in _REMOTE_KINDS
+        # a node-addressed multicast is scheduler-routed (hop descriptors are
+        # plain local relayouts), so only the mesh-axis spelling is a remote
+        # lowering (it compiles to a collective permute like ``peer``)
+        return (self.kind in _REMOTE_KINDS
+                or (self.kind == _MULTICAST and self.axis is not None))
 
     # -- constructors --------------------------------------------------------
     @classmethod
@@ -99,9 +127,40 @@ class Endpoint:
         return cls(kind=_REDUCE, layout=_as_layout(layout), axis=axis,
                    axis_size=axis_size)
 
+    @classmethod
+    def multicast(cls, dsts: Sequence[Any],
+                  layout: str | L.Layout = L.MN) -> "Endpoint":
+        """Node-addressed multicast: ``dsts`` is a sequence of topology node
+        names or ``(node, layout)`` pairs; a bare node inherits ``layout``
+        (the default destination layout).  Each destination layout may be
+        ``"auto"`` — resolved independently against its routed link."""
+        default = _as_layout(layout)
+        specs = []
+        for d in dsts:
+            if isinstance(d, str):
+                specs.append((d, default))
+            else:
+                node, lay = d
+                specs.append((str(node), _as_layout(lay)))
+        return cls(kind=_MULTICAST, layout=default, dsts=tuple(specs))
+
+    @classmethod
+    def multicast_axis(cls, axis: str, perm: Sequence[Tuple[int, int]],
+                       layout: str | L.Layout = L.MN) -> "Endpoint":
+        """Mesh-axis multicast: the rotating one-hop broadcast (every device
+        forwards its shard to the next ring position) an all-gather is made
+        of.  Lowers exactly like ``peer`` — same wire traffic, same compiled
+        collective — but records the movement as ``multicast`` in the
+        ledger."""
+        return cls(kind=_MULTICAST, layout=_as_layout(layout), axis=axis,
+                   perm=tuple((int(a), int(b)) for a, b in perm))
+
     def summary(self) -> str:
         if self.kind == _LOCAL:
             return self.layout.name
+        if self.kind == _MULTICAST and self.dsts is not None:
+            inner = ",".join(f"{n}@{l.name}" for n, l in self.dsts)
+            return f"multicast[{inner}]"
         return f"{self.kind}({self.axis})@{self.layout.name}"
 
 
@@ -164,6 +223,9 @@ class XDMADescriptor:
         set_("plugins", pre + post)
         set_("src_layout", src.layout)
         set_("dst_layout", dst.layout)
+        if src.kind == _MULTICAST:
+            raise ValueError("multicast is a destination role; put the "
+                             "multicast endpoint on dst")
         if src.is_remote and dst.is_remote:
             raise ValueError("at most one endpoint may be remote "
                              f"({src.summary()} -> {dst.summary()})")
@@ -175,9 +237,11 @@ class XDMADescriptor:
     # -- movement classification --------------------------------------------
     @property
     def movement(self) -> str:
-        """One of 'local', 'peer', 'all_to_all', 'reduce' — from the
-        descriptor alone; this is what :func:`repro.core.api.transfer`
-        dispatches on."""
+        """One of 'local', 'peer', 'all_to_all', 'reduce', 'multicast' —
+        from the descriptor alone; this is what
+        :func:`repro.core.api.transfer` dispatches on."""
+        if self.dst.kind == _MULTICAST:
+            return _MULTICAST
         if self.dst.is_remote:
             return self.dst.kind
         if self.src.is_remote:

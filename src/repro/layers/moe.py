@@ -113,14 +113,17 @@ def _pmean(x, axes, n_total: int):
 @functools.lru_cache(maxsize=None)
 def _hop_desc(axis: str, n: int) -> XDMADescriptor:
     perm = tuple((i, (i + 1) % n) for i in range(n))
-    return XDMADescriptor(dst=Endpoint.peer(axis, perm))
+    return XDMADescriptor(dst=Endpoint.multicast_axis(axis, perm))
 
 
 def _ring_all_gather(x, axis_name: str, n: int):
     """``lax.all_gather(x, axis, axis=1, tiled=True)`` decomposed into n-1
-    XDMA peer-tunnel hops (paper §II: every link is a point-to-point
-    half-XDMA pair).  Pure data movement — bit-identical to the collective —
-    and every hop is a ``peer`` descriptor the capture ledger records.
+    rotating one-hop broadcasts: an all-gather is n simultaneous multicasts
+    (every rank's shard fans out to all peers), and on a ring each rotation
+    step is one ``multicast_axis`` hop — the same collective permute a
+    ``peer`` descriptor lowers to, so the decomposition stays pure data
+    movement, bit-identical to the collective, with every hop recorded as a
+    ``multicast`` endpoint in the capture ledger (DESIGN.md §14).
 
     ``x`` is ``(B, S_local, d)``; returns ``(B, n * S_local, d)`` ordered by
     source rank, exactly like the tiled all-gather it replaces.

@@ -34,10 +34,13 @@ import importlib
 # public name -> submodule that defines it
 _EXPORTS = {
     "Link": "topology", "Topology": "topology",
+    "MulticastHop": "topology", "MulticastTree": "topology",
     "SimReport": "simulator", "SimTask": "simulator", "Span": "simulator",
     "queue_sim_tasks": "simulator", "serialize": "simulator",
     "simulate": "simulator",
+    "multicast_sim_tasks": "simulator", "unicast_sim_tasks": "simulator",
     "DistributedScheduler": "scheduler", "XDMAFuture": "scheduler",
+    "MulticastFuture": "scheduler",
     "DescriptorRing": "ring", "WouldBlock": "ring", "Completion": "ring",
     "TraceEvent": "trace", "TransferTrace": "trace", "capture": "trace",
     "replay": "trace",

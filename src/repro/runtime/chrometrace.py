@@ -97,6 +97,15 @@ def sim_report_events(report: SimReport, *, pid: int = 1,
                     args["nbytes"] = int(ev.nbytes)
                 if ev.wire_nbytes is not None:
                     args["wire_nbytes"] = int(ev.wire_nbytes)
+                if getattr(ev, "multicast_group", None) is not None:
+                    # the tree fan-out, visible per resource row in Perfetto:
+                    # fork marks hops serving >= 2 destinations
+                    args["multicast_group"] = int(ev.multicast_group)
+                    if ev.multicast_hop is not None:
+                        args["hop"] = "->".join(ev.multicast_hop)
+                    args["serves"] = int(ev.multicast_serves)
+                    if ev.multicast_serves >= 2:
+                        args["fork"] = True
             events.append({"name": s.label or f"task{s.task_id}",
                            "cat": cat, "ph": "X",
                            "ts": s.start * _US, "dur": s.duration * _US,

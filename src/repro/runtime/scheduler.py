@@ -50,14 +50,16 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 
 from repro.core import api as _api
-from repro.core.descriptor import XDMADescriptor
+from repro.core import autotune as _autotune
+from repro.core import layouts as _L
+from repro.core.descriptor import XDMADescriptor, describe
 
 from . import telemetry as _tm
 from .ring import DEFAULT_RING_DEPTH, Completion, DescriptorRing, WouldBlock
 from .simulator import SimReport, SimTask, simulate
-from .topology import Topology
+from .topology import MulticastTree, Topology
 
-__all__ = ["XDMAFuture", "DistributedScheduler"]
+__all__ = ["XDMAFuture", "MulticastFuture", "DistributedScheduler"]
 
 # CSR-style counter banks (DESIGN.md §11): per-link byte/burst/stall tallies,
 # per-resource queue-occupancy high-water marks, and the ring plane's
@@ -67,6 +69,9 @@ __all__ = ["XDMAFuture", "DistributedScheduler"]
 _LINKS = _tm.bank("links")
 _QUEUES = _tm.bank("queues")
 _RINGS = _tm.bank("rings")
+# The multicast plane (DESIGN.md §14): trees built, hops/forks posted, and
+# the wire bytes shared hops avoid moving vs N private unicast copies.
+_MCAST = _tm.bank("multicast")
 
 # Batched-round programs, shared by every scheduler instance: keyed by the
 # round's descriptor identities (same scheme as the CFG cache), so a fresh
@@ -132,6 +137,55 @@ class XDMAFuture:
     def __repr__(self):
         state = "done" if self.done() else "pending"
         return f"XDMAFuture(task={self.task_id}, {state})"
+
+
+class MulticastFuture:
+    """Handle for one tree-routed multicast: the fan of per-destination
+    delivery futures plus the synthesized :class:`MulticastTree`.
+
+    ``result()`` returns the per-destination dst buffers in the descriptor's
+    destination order; the multicast *completes* only when every leaf hop
+    has retired (all-leaves semantics — intermediate forwarding hops alone
+    do not complete it)."""
+
+    __slots__ = ("_sched", "tree", "_delivery")
+
+    def __init__(self, sched: "DistributedScheduler", tree: MulticastTree,
+                 delivery: "collections.OrderedDict[str, XDMAFuture]"):
+        self._sched = sched
+        self.tree = tree
+        self._delivery = delivery
+
+    @property
+    def dsts(self) -> Tuple[str, ...]:
+        return tuple(self._delivery)
+
+    def future(self, dst: str) -> XDMAFuture:
+        """The delivery future for one destination node."""
+        return self._delivery[dst]
+
+    def done(self) -> bool:
+        return all(f.done() for f in self._delivery.values())
+
+    def result(self) -> Tuple[Any, ...]:
+        """Drain until every destination's delivery hop has dispatched, then
+        return the per-destination buffers (descriptor destination order)."""
+        return tuple(f.result() for f in self._delivery.values())
+
+    def result_at(self, dst: str) -> Any:
+        return self._delivery[dst].result()
+
+    def dst_descriptors(self) -> Dict[str, XDMADescriptor]:
+        """The (possibly auto-resolved) delivery-hop descriptor per
+        destination — how each dst's layout actually resolved against its
+        routed link."""
+        return {d: self._sched._tasks[f.task_id].desc
+                for d, f in self._delivery.items()}
+
+    def __repr__(self):
+        state = "done" if self.done() else "pending"
+        return (f"MulticastFuture({len(self._delivery)} dsts, "
+                f"{len(self.tree.hops)} hops, {state})")
 
 
 @dataclasses.dataclass
@@ -283,6 +337,11 @@ class DistributedScheduler:
                 tenant="") -> XDMAFuture:
         if not isinstance(desc, XDMADescriptor):
             raise TypeError(f"submit takes a descriptor, got {type(desc)}")
+        if desc.movement == "multicast" and desc.dst.dsts is not None:
+            raise ValueError(
+                "node-addressed multicast descriptors fork into per-hop tree "
+                "tasks: use submit_multicast(x, desc, src=...) instead of "
+                "submit()")
         resource = self._route(desc, link)
         desc = self._resolve_auto(desc, x, resource)
         tid = self._next_id
@@ -337,6 +396,119 @@ class DistributedScheduler:
                                             label=task.label)
             task.trace = cap
         return fut
+
+    # -- multicast (DESIGN.md §14) -------------------------------------------
+    def submit_multicast(self, x: Any, desc: XDMADescriptor, *, src: str,
+                         deps: Sequence = (), tenant: str = "",
+                         label: str = "",
+                         policy: str = "tree") -> MulticastFuture:
+        """Fork one node-addressed multicast descriptor into per-hop tasks
+        over :meth:`Topology.multicast_tree`.
+
+        ``x`` is the payload at ``src`` (or the :class:`XDMAFuture`
+        producing it); ``desc.dst`` must be ``Endpoint.multicast(dsts=...)``.
+        Every tree hop becomes one ordinary ring post on its own link — one
+        doorbell CSR write and one ring credit per hop, exactly the PR-8
+        submission machinery — with each non-root hop data-dependent on the
+        hop that feeds it, so a shared edge carries the payload once and the
+        simulator prices it once.  A destination layout spelled ``"auto"``
+        resolves independently against that destination's routed delivery
+        link.  Returns a :class:`MulticastFuture` completing when all leaves
+        retire."""
+        tel = _tm._ACTIVE
+        if tel is None:
+            return self._submit_multicast(x, desc, src, deps, tenant, label,
+                                          policy)
+        with tel.span("DistributedScheduler.submit_multicast",
+                      track="scheduler", desc=desc.summary()
+                      if isinstance(desc, XDMADescriptor) else repr(desc)):
+            return self._submit_multicast(x, desc, src, deps, tenant, label,
+                                          policy)
+
+    def _submit_multicast(self, x, desc, src, deps, tenant, label,
+                          policy) -> MulticastFuture:
+        if not isinstance(desc, XDMADescriptor):
+            raise TypeError(f"submit_multicast takes a descriptor, "
+                            f"got {type(desc)}")
+        if desc.movement != "multicast" or desc.dst.dsts is None:
+            raise ValueError("submit_multicast needs a node-addressed "
+                             "multicast descriptor (Endpoint.multicast)")
+        if desc.pre or desc.post:
+            raise ValueError("multicast hops are pure relayouts; plugin "
+                             "chains are not supported on multicast "
+                             "descriptors yet")
+        spec_map = dict(desc.dst.dsts)
+        tree = self.topology.multicast_tree(
+            src, [n for n, _ in desc.dst.dsts], policy=policy)
+        transit = (desc.src.layout if not desc.src.layout.is_auto else _L.MN)
+        # the payload geometry, when known at submit: lets per-dst "auto"
+        # layouts resolve eagerly against their delivery links, so a child
+        # hop can chain off its parent's *resolved* physical layout
+        logical = dtype = None
+        if not isinstance(x, XDMAFuture):
+            leaf = getattr(x, "values", x)
+            shape = getattr(leaf, "shape", None)
+            if shape is not None and getattr(leaf, "dtype", None) is not None:
+                shape = tuple(int(s) for s in shape)
+                try:
+                    logical = (transit.logical_shape(shape)
+                               if not desc.src.layout.is_auto else shape)
+                except (ValueError, KeyError):
+                    logical = shape
+                dtype = leaf.dtype
+        forwards = {h.src for h in tree.hops}
+        gid = self._next_id              # group id: unique, pre-allocation
+        futs: List[XDMAFuture] = []
+        out_layouts: List[_L.Layout] = []
+        hop_events: List[Any] = []
+        base = label or "mcast"
+        for hop in tree.hops:
+            lay = spec_map.get(hop.dst, transit)
+            if lay.is_auto:
+                if logical is not None:
+                    probe = describe(_L.MN, lay, d_buf=desc.d_buf)
+                    resolved = _autotune.resolve_descriptor(
+                        probe, logical, dtype,
+                        link=self.topology.link(hop.link))
+                    lay = resolved.dst.layout
+                elif hop.dst in forwards:
+                    raise ValueError(
+                        f"destination {hop.dst!r} forwards to other hops, so "
+                        "its 'auto' layout needs a concrete payload at "
+                        "submit time (future-fed multicast resolves auto "
+                        "only on leaf destinations)")
+            in_lay = (transit if hop.parent is None
+                      else out_layouts[hop.parent])
+            hop_desc = describe(in_lay, lay, d_buf=desc.d_buf)
+            fut = self._submit(
+                x if hop.parent is None else futs[hop.parent], hop_desc,
+                hop.link, tuple(deps) if hop.parent is None else (), None,
+                f"{base}/{hop.src}->{hop.dst}", tenant)
+            futs.append(fut)
+            out_layouts.append(lay)
+            task = self._tasks[fut.task_id]
+            if task.event is not None:
+                ev = task.event
+                ev.endpoint = "multicast"
+                ev.multicast_group = gid
+                ev.multicast_hop = (hop.src, hop.dst)
+                ev.multicast_serves = len(hop.serves)
+                hop_events.append(ev)
+        if hop_events:
+            # the anchor: enough to re-synthesize the tree on any fabric
+            hop_events[0].multicast_spec = (
+                src, tuple((n, l.name) for n, l in desc.dst.dsts), desc.d_buf)
+        _MCAST.inc("trees")
+        _MCAST.inc("hops", len(tree.hops))
+        _MCAST.inc("forks", tree.fork_count)
+        _MCAST.inc("shared_hops", tree.shared_hop_count)
+        if tree.kind == "chain":
+            _MCAST.inc("chain_fallbacks")
+        if not isinstance(x, XDMAFuture):
+            _MCAST.inc("saved_hop_bytes", tree.bytes_saved(_nbytes(x)))
+        delivery = collections.OrderedDict(
+            (d, futs[tree.delivery(d)]) for d in tree.dsts)
+        return MulticastFuture(self, tree, delivery)
 
     def _resolve_auto(self, desc: XDMADescriptor, x: Any,
                       resource: str) -> XDMADescriptor:

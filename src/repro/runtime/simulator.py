@@ -29,7 +29,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .topology import Topology
 
 __all__ = ["SimTask", "Span", "SimReport", "simulate", "serialize",
-           "queue_sim_tasks"]
+           "queue_sim_tasks", "multicast_sim_tasks", "unicast_sim_tasks"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,4 +250,54 @@ def queue_sim_tasks(queue, in_shape: Sequence[int], in_dtype,
                              pipeline_depth=desc.d_buf))
         prev = (tid,)
         shape, dtype = out_shape, out_dtype
+    return tasks
+
+
+def multicast_sim_tasks(topology: Topology, src: str, dsts: Sequence[str],
+                        nbytes: int, *, start_id: int = 0,
+                        burst_bytes: Optional[int] = None,
+                        pipeline_depth: int = 1, csr_writes: int = 1,
+                        deps: Sequence[int] = (), label: str = "mcast",
+                        policy: str = "tree"):
+    """SimTasks for one tree-routed multicast: one task per tree hop, each
+    depending on the hop that feeds it, so shared edges carry (and are
+    priced for) the payload exactly once.  One doorbell CSR write per hop by
+    default — a fork is a real descriptor post at the branching half-XDMA.
+    Returns ``(tasks, tree)``; task ids follow the tree's hop order."""
+    tree = topology.multicast_tree(src, dsts, policy=policy)
+    tasks: List[SimTask] = []
+    for i, hop in enumerate(tree.hops):
+        hop_deps = (tuple(deps) if hop.parent is None
+                    else (start_id + hop.parent,))
+        tasks.append(SimTask(id=start_id + i, resource=hop.link,
+                             nbytes=nbytes, deps=hop_deps,
+                             label=f"{label}/{hop.src}->{hop.dst}",
+                             burst_bytes=burst_bytes,
+                             pipeline_depth=pipeline_depth,
+                             csr_writes=csr_writes))
+    return tasks, tree
+
+
+def unicast_sim_tasks(topology: Topology, src: str, dsts: Sequence[str],
+                      nbytes: int, *, start_id: int = 0,
+                      burst_bytes: Optional[int] = None,
+                      pipeline_depth: int = 1, csr_writes: int = 1,
+                      deps: Sequence[int] = (), label: str = "ucast"):
+    """The N-unicast baseline for the same movement: each destination gets
+    its own private copy of its shortest path (hops chained per destination,
+    destinations independent), priced with the exact same cost construction
+    as :func:`multicast_sim_tasks` — so with zero shared hops the two
+    schedules cost identically (the graceful-degradation contract)."""
+    tasks: List[SimTask] = []
+    tid = start_id
+    for d in tuple(dict.fromkeys(dsts)):
+        prev: Tuple[int, ...] = tuple(deps)
+        for l in topology.path(src, d):
+            tasks.append(SimTask(id=tid, resource=l.name, nbytes=nbytes,
+                                 deps=prev, label=f"{label}/{d}/{l.src}->{l.dst}",
+                                 burst_bytes=burst_bytes,
+                                 pipeline_depth=pipeline_depth,
+                                 csr_writes=csr_writes))
+            prev = (tid,)
+            tid += 1
     return tasks

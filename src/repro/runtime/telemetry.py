@@ -326,6 +326,7 @@ def snapshot() -> Dict[str, Any]:
         "cfg_stats": _pc.cfg_stats(),
         "scheduler_links": bank("links").as_dict(),
         "scheduler_rings": bank("rings").as_dict(),
+        "multicast_stats": bank("multicast").as_dict(),
         "pool_stats": {d[len("pool:"):]: b.as_dict()
                        for d, b in _BANKS.items() if d.startswith("pool:")},
     }

@@ -21,15 +21,22 @@ Presets:
   pairs (``h2d{i}`` / ``d2h{i}``), the staging/KV-movement fabric.
 * :meth:`Topology.parallel` — ``n`` parallel links between two memories (the
   multi-lane a2a fabric the MoE dispatch chunks over).
+
+Multicast route synthesis (DESIGN.md §14): :meth:`Topology.multicast_tree`
+builds the shortest-path tree a point-to-multipoint descriptor forks over —
+each physical edge carries the payload once, however many destinations ride
+it — with a ring-chain fallback threading the stream through the
+destinations in order.  :class:`MulticastTree` carries the per-edge payload
+accounting (which destinations each hop serves, hops saved vs N unicasts).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
-__all__ = ["Link", "Topology", "DEFAULT_BANDWIDTH", "DEFAULT_LATENCY",
-           "DEFAULT_DOORBELL_COST"]
+__all__ = ["Link", "Topology", "MulticastHop", "MulticastTree",
+           "DEFAULT_BANDWIDTH", "DEFAULT_LATENCY", "DEFAULT_DOORBELL_COST"]
 
 # Defaults sized like one ICI link: ~100 GB/s, ~1 us hop latency, 512-bit beats.
 DEFAULT_BANDWIDTH = 100e9       # bytes / second
@@ -125,6 +132,84 @@ class Link:
                 f"{self.bandwidth / 1e9:.0f}GB/s +{self.latency * 1e6:.1f}us")
 
 
+@dataclasses.dataclass(frozen=True)
+class MulticastHop:
+    """One edge of a multicast tree: the payload crosses ``link`` exactly
+    once, serving every destination in ``serves``.  ``parent`` is the index
+    (into :attr:`MulticastTree.hops`) of the hop that feeds this one — None
+    for hops leaving the tree root."""
+
+    link: str
+    src: str
+    dst: str
+    parent: Optional[int]
+    serves: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class MulticastTree:
+    """A synthesized point-to-multipoint route (DESIGN.md §14).
+
+    ``hops`` are in topological order (every hop's parent precedes it), so a
+    scheduler can fork one task per hop with a dependency on its parent and
+    shared edges are priced exactly once.  ``kind`` is ``"tree"`` for the
+    greedy shortest-path-tree synthesis, ``"chain"`` for the ring-chain
+    route (stream threaded through the destinations in order)."""
+
+    src: str
+    dsts: Tuple[str, ...]
+    hops: Tuple[MulticastHop, ...]
+    kind: str = "tree"
+
+    def delivery(self, dst: str) -> int:
+        """Index of the hop that delivers ``dst`` (its write-side edge)."""
+        for i, h in enumerate(self.hops):
+            if h.dst == dst:
+                return i
+        raise KeyError(f"no hop delivers {dst!r}")
+
+    @property
+    def shared_hops(self) -> Tuple[MulticastHop, ...]:
+        """Hops carrying the payload for >= 2 destinations — where the fork
+        saves wire traffic vs N unicasts."""
+        return tuple(h for h in self.hops if len(h.serves) >= 2)
+
+    @property
+    def shared_hop_count(self) -> int:
+        return len(self.shared_hops)
+
+    @property
+    def unicast_hop_count(self) -> int:
+        """Edges N private per-destination copies of these tree paths would
+        cross (each hop counted once per destination it serves)."""
+        return sum(len(h.serves) for h in self.hops)
+
+    @property
+    def saved_hops(self) -> int:
+        """Edge crossings the shared tree avoids vs per-destination copies."""
+        return self.unicast_hop_count - len(self.hops)
+
+    def bytes_saved(self, nbytes: int) -> int:
+        """Wire bytes the shared hops avoid moving for an ``nbytes`` payload."""
+        return self.saved_hops * max(0, int(nbytes))
+
+    @property
+    def fork_count(self) -> int:
+        """Branch points: nodes feeding >= 2 child hops (plus the root when
+        it fans out) — each is one stream fork in the half-XDMA."""
+        fanout: Dict[Optional[int], int] = {}
+        for h in self.hops:
+            fanout[h.parent] = fanout.get(h.parent, 0) + 1
+        return sum(1 for n in fanout.values() if n >= 2)
+
+    def summary(self) -> str:
+        edges = ", ".join(f"{h.src}->{h.dst}(x{len(h.serves)})"
+                          for h in self.hops)
+        return (f"MulticastTree({self.kind}, {self.src} -> "
+                f"{len(self.dsts)} dsts, {len(self.hops)} hops "
+                f"[{edges}], saved={self.saved_hops})")
+
+
 class Topology:
     """A named graph of memories (nodes) and links (directed edges)."""
 
@@ -199,6 +284,146 @@ class Topology:
     def total_bandwidth(self) -> float:
         return sum(l.bandwidth for l in self._links.values())
 
+    # -- routing -------------------------------------------------------------
+    def path(self, src: str, dst: str) -> Tuple[Link, ...]:
+        """Shortest directed path (hop count) ``src -> dst`` as the links to
+        cross, BFS with insertion-order tie-breaks (bit-deterministic).
+        Empty for ``src == dst``; raises ``ValueError`` when unreachable."""
+        for n in (src, dst):
+            if n not in self._nodes:
+                raise ValueError(f"unknown node {n!r} in topology {self.name!r}")
+        if src == dst:
+            return ()
+        hop = self._bfs((src,), dst)
+        if hop is None:
+            raise ValueError(f"no route {src!r} -> {dst!r} in {self.name!r}")
+        return hop[1]
+
+    def _bfs(self, sources: Sequence[str],
+             target: str) -> Optional[Tuple[str, Tuple[Link, ...]]]:
+        """Multi-source BFS: the nearest route from any of ``sources`` to
+        ``target`` as ``(start_node, links)``.  Sources are seeded in the
+        given order and neighbours expand in link insertion order, so ties
+        resolve deterministically.  None when unreachable."""
+        prev: Dict[str, Optional[Tuple[str, Link]]] = {}
+        start_of: Dict[str, str] = {}
+        frontier: List[str] = []
+        for s in sources:
+            if s not in prev:
+                prev[s] = None
+                start_of[s] = s
+                frontier.append(s)
+        while frontier and target not in prev:
+            nxt: List[str] = []
+            for node in frontier:
+                for l in self.links_from(node):
+                    if l.dst not in prev:
+                        prev[l.dst] = (node, l)
+                        start_of[l.dst] = start_of[node]
+                        nxt.append(l.dst)
+            frontier = nxt
+        if target not in prev:
+            return None
+        links: List[Link] = []
+        node = target
+        while prev[node] is not None:
+            pnode, l = prev[node]
+            links.append(l)
+            node = pnode
+        return node, tuple(reversed(links))
+
+    def multicast_tree(self, src: str, dsts: Sequence[str], *,
+                       policy: str = "tree") -> MulticastTree:
+        """Synthesize the point-to-multipoint route ``src -> dsts``.
+
+        ``policy="tree"`` (default) grows a Steiner-ish shortest-path tree
+        greedily: destinations are processed nearest-first (BFS distance
+        from ``src``, submission order on ties) and each connects to the
+        *nearest node already in the tree* — so a ring naturally yields the
+        forwarding chain and a torus forks at branch points.
+        ``policy="chain"`` forces the ring-chain route — the stream threaded
+        ``src -> dsts[0] -> dsts[1] -> ...`` in submission order — which is
+        also the fallback when tree growth cannot reach a destination.
+        Every physical edge appears once, however many destinations it
+        serves (the per-edge payload accounting multicast pricing rests on).
+        """
+        if policy not in ("tree", "chain"):
+            raise ValueError(f"policy must be 'tree' or 'chain', got {policy!r}")
+        dsts = tuple(dict.fromkeys(dsts))
+        if not dsts:
+            raise ValueError("multicast needs at least one destination")
+        if src in dsts:
+            raise ValueError(f"multicast src {src!r} cannot be a destination")
+        for n in (src,) + dsts:
+            if n not in self._nodes:
+                raise ValueError(f"unknown node {n!r} in topology {self.name!r}")
+        kind = policy
+        hops = None
+        if policy == "tree":
+            hops = self._grow_tree(src, dsts)
+            if hops is None:
+                kind = "chain"               # fallback: thread through dsts
+        if hops is None:
+            hops = self._grow_chain(src, dsts)
+        # per-edge payload accounting: every destination rides each hop on
+        # the parent path from its delivery edge back to the root
+        serves: List[List[str]] = [[] for _ in hops]
+        for d in dsts:
+            i = next(j for j, h in enumerate(hops) if h[2] == d)
+            while i is not None:
+                serves[i].append(d)
+                i = hops[i][3]
+        return MulticastTree(
+            src=src, dsts=dsts, kind=kind,
+            hops=tuple(MulticastHop(link=h[0], src=h[1], dst=h[2],
+                                    parent=h[3], serves=tuple(sv))
+                       for h, sv in zip(hops, serves)))
+
+    def _grow_tree(self, src: str, dsts: Tuple[str, ...]):
+        """Greedy SPT growth; hops as [link, src, dst, parent] rows in
+        topological order, or None when some destination is unreachable."""
+        order = sorted(
+            range(len(dsts)),
+            key=lambda i: (len(self.path(src, dsts[i]))
+                           if self._bfs((src,), dsts[i]) is not None
+                           else len(self._nodes) + 1))
+        in_tree: Dict[str, Optional[int]] = {src: None}
+        hops: List[List] = []
+        for i in order:
+            d = dsts[i]
+            if d in in_tree:
+                continue                     # already a forwarding node
+            found = self._bfs(tuple(in_tree), d)
+            if found is None:
+                return None
+            start, links = found
+            parent = in_tree[start]
+            for l in links:
+                hops.append([l.name, l.src, l.dst, parent])
+                parent = len(hops) - 1
+                in_tree[l.dst] = parent
+        return hops
+
+    def _grow_chain(self, src: str, dsts: Tuple[str, ...]):
+        """Ring-chain route: shortest path src -> dsts[0], then dst -> dst in
+        submission order; raises when a segment is unreachable."""
+        hops: List[List] = []
+        reached: Dict[str, int] = {}
+        cur, parent = src, None
+        for d in dsts:
+            if d in reached:
+                parent = reached[d]
+                cur = d
+                continue
+            for l in self.path(cur, d):
+                hops.append([l.name, l.src, l.dst, parent])
+                parent = len(hops) - 1
+                if l.dst not in reached:
+                    reached[l.dst] = parent
+            cur = d
+            parent = reached[d]
+        return hops
+
     def summary(self) -> str:
         lines = [f"Topology({self.name!r}, {len(self._nodes)} nodes, "
                  f"{len(self._links)} links)"]
@@ -261,10 +486,28 @@ class Topology:
         return topo
 
     @classmethod
-    def host_device(cls, n: int = 1, *, bandwidth: float = DEFAULT_BANDWIDTH / 4,
+    def host_device(cls, n: int = 1, *, devices: Optional[int] = None,
+                    bandwidth: float = DEFAULT_BANDWIDTH / 4,
                     latency: float = 4 * DEFAULT_LATENCY,
                     width: int = DEFAULT_WIDTH) -> "Topology":
-        """Host DRAM <-> device HBM with n DMA link pairs (h2d{i}/d2h{i})."""
+        """Host DRAM <-> device HBM with n DMA link pairs (h2d{i}/d2h{i}).
+
+        ``devices=m`` builds the star variant instead: ``m`` distinct
+        devices each behind its own link pair (``h2d{i}: host -> dev{i}``,
+        ``d2h{i}: dev{i} -> host``).  A star has no shareable intermediate
+        hops, so a host-rooted multicast degrades gracefully to exactly N
+        unicast costs — the no-sharing baseline in the PR-10 sweep.
+        """
+        if devices is not None:
+            if devices < 1:
+                raise ValueError("host_device needs >= 1 device")
+            topo = cls(name=f"host_device_star{devices}")
+            for i in range(devices):
+                topo.add_link("host", f"dev{i}", name=f"h2d{i}",
+                              bandwidth=bandwidth, latency=latency, width=width)
+                topo.add_link(f"dev{i}", "host", name=f"d2h{i}",
+                              bandwidth=bandwidth, latency=latency, width=width)
+            return topo
         if n < 1:
             raise ValueError("host_device needs >= 1 link pair")
         topo = cls(name=f"host_device{n}")

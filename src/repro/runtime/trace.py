@@ -122,6 +122,16 @@ class TraceEvent:
     label: str = ""
     source: str = "transfer"             # transfer | queue | scheduler | compute
     ring_occupancy: Optional[int] = None
+    # Multicast tree provenance (DESIGN.md §14): every per-hop task of one
+    # submit_multicast carries the same ``multicast_group`` id and its own
+    # ``(hop src node, hop dst node)`` / served-destination count; the
+    # group's first event additionally records ``multicast_spec =
+    # (src, ((dst node, layout name), ...), d_buf)`` — enough for replay()
+    # to re-synthesize the tree on a *different* fabric and reprice it.
+    multicast_group: Optional[int] = None
+    multicast_hop: Optional[Tuple[str, str]] = None
+    multicast_serves: int = 0
+    multicast_spec: Optional[Tuple] = None
 
 
 def _wire_nbytes(desc: XDMADescriptor, logical_shape, in_dtype) -> Optional[int]:
@@ -397,12 +407,78 @@ class TransferTrace:
         links = topology.link_names
         if not links:
             raise ValueError(f"topology {topology.name!r} has no links")
+        # Multicast groups whose recorded tree does not fit this fabric (some
+        # hop link missing) are re-synthesized from the group's recorded spec:
+        # fresh tree, fresh per-hop tasks, downstream deps remapped onto the
+        # new delivery hops.  Groups whose links all exist replay unchanged —
+        # same-fabric replay keeps per-edge byte parity with the capture.
+        groups: Dict[int, List[TraceEvent]] = {}
+        for ev in self.events:
+            if ev.multicast_group is not None:
+                groups.setdefault(ev.multicast_group, []).append(ev)
+        resynth: Dict[int, List[SimTask]] = {}    # anchor ev id -> new tasks
+        dep_map: Dict[int, Tuple[int, ...]] = {}  # old ev id -> new task ids
+        skip: set = set()
+        next_id = max((e.id for e in self.events), default=-1) + 1
+        for gid, evs in groups.items():
+            if all(e.link is not None and e.link in topology for e in evs):
+                continue
+            anchor = next((e for e in evs if e.multicast_spec is not None),
+                          None)
+            if anchor is None:
+                continue          # no spec recorded: fall through to rr routing
+            mc_src, specs, d_buf = anchor.multicast_spec
+            try:
+                tree = topology.multicast_tree(mc_src, [n for n, _ in specs])
+            except ValueError:
+                continue          # nodes unknown here: fall through
+            new: List[SimTask] = []
+            delivery: Dict[str, int] = {}
+            for hop in tree.hops:
+                tid = next_id
+                next_id += 1
+                new.append(SimTask(
+                    id=tid, resource=hop.link,
+                    nbytes=int(anchor.wire_nbytes
+                               if anchor.wire_nbytes is not None
+                               else anchor.nbytes or 0),
+                    deps=(anchor.deps if hop.parent is None
+                          else (new[hop.parent].id,)),
+                    label=f"{anchor.label}/{hop.src}->{hop.dst}",
+                    burst_bytes=anchor.burst_bytes,
+                    pipeline_depth=int(d_buf)))
+                delivery[hop.dst] = tid
+            leaves = tuple(delivery[n] for n, _ in specs)
+            for e in evs:
+                skip.add(e.id)
+                if e.multicast_hop is not None \
+                        and e.multicast_hop[1] in delivery:
+                    dep_map[e.id] = (delivery[e.multicast_hop[1]],)
+                else:
+                    dep_map[e.id] = leaves
+            resynth[anchor.id] = new
+        def _remap(deps: Tuple[int, ...]) -> Tuple[int, ...]:
+            return tuple(dict.fromkeys(
+                nid for d in deps for nid in dep_map.get(d, (d,))))
+
         rr = 0
         tasks: List[SimTask] = []
         for ev in self.events:
+            if ev.id in skip:
+                for t in resynth.pop(ev.id, ()):
+                    burst = t.burst_bytes or ev.row_bytes
+                    if sw_agu:
+                        t = dataclasses.replace(
+                            t, burst_bytes=burst,
+                            issue_overhead_s=SW_ISSUE_OVERHEAD,
+                            pipeline_depth=1)
+                    else:
+                        t = dataclasses.replace(t, burst_bytes=burst)
+                    tasks.append(t)
+                continue
             if ev.kind == "compute":
                 tasks.append(SimTask(id=ev.id, resource=ev.link or "compute0",
-                                     deps=ev.deps, cost_s=ev.cost_s,
+                                     deps=_remap(ev.deps), cost_s=ev.cost_s,
                                      label=ev.label))
                 continue
             if ev.link is not None and ev.link in topology:
@@ -419,13 +495,13 @@ class TransferTrace:
                     task = queue_sim_tasks(XDMAQueue([ev.desc], name="ev"),
                                            ev.logical_shape, ev.in_dtype, res,
                                            start_id=ev.id)[0]
-                    task = dataclasses.replace(task, deps=ev.deps,
+                    task = dataclasses.replace(task, deps=_remap(ev.deps),
                                                label=ev.label)
                 except (ValueError, KeyError):
                     task = None
             if task is None:
                 task = SimTask(id=ev.id, resource=res, nbytes=ev.nbytes or 0,
-                               deps=ev.deps, label=ev.label,
+                               deps=_remap(ev.deps), label=ev.label,
                                burst_bytes=ev.burst_bytes,
                                pipeline_depth=ev.pipeline_depth)
             if ev.wire_nbytes is not None:

@@ -1,5 +1,8 @@
 from .engine import ServingEngine, make_serve_step  # noqa: F401
-from .transfer import kv_prefill_store, kv_load_transposed, cross_stage_transfer  # noqa: F401
+from .transfer import (  # noqa: F401
+    kv_prefill_store, kv_load_transposed, cross_stage_transfer,
+    replica_weight_broadcast, prefix_cache_fanout,
+)
 from .paged import (  # noqa: F401
     Page, PagedKVPool, default_serving_topology, paginate, depaginate,
     pages_for_rows, DEFAULT_PAGE_ROWS,

@@ -110,6 +110,28 @@ class ServingEngine:
             leaves[i] = f.result().reshape(leaves[i].shape)
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
+    # -- replica scale-up: the model to N replicas as one tree ---------------
+    def distribute_weights(self, n_replicas: int = 4, *, topology=None):
+        """Stage this engine's parameters onto ``n_replicas`` serving
+        replicas through the multicast plane (one tree-routed descriptor
+        per weight matrix — :func:`repro.serving.transfer
+        .replica_weight_broadcast`), on ``topology`` or a
+        ``ring(n_replicas + 1)`` fabric whose first node hosts the source
+        copy.  Returns ``({replica: params}, scheduler)``; the scheduler
+        (kept as ``last_scheduler``) holds the simulated timeline and, under
+        ``capture()``, the tree is in the ledger."""
+        from repro.runtime import DistributedScheduler, Topology
+
+        topo = (topology if topology is not None
+                else Topology.ring(n_replicas + 1))
+        sched = DistributedScheduler(topo, name="weights")
+        nodes = list(topo.nodes)
+        out = T.replica_weight_broadcast(
+            self.params, scheduler=sched, src=nodes[0],
+            replicas=nodes[1:1 + n_replicas])
+        self.last_scheduler = sched
+        return out, sched
+
     # -- the serving loop ----------------------------------------------------
     def generate(self, batch: Dict[str, Any], n_steps: int, *,
                  scheduler=None):

@@ -165,6 +165,77 @@ def kv_roundtrips_overlapped(kvs: Sequence[jnp.ndarray], *, scheduler=None,
     return [f.result() for f in futures], scheduler
 
 
+# -- multicast fan-out: weights and shared prefixes to many replicas --------
+@functools.lru_cache(maxsize=None)
+def _fanout_desc(dsts: Tuple, layout):
+    return describe(Endpoint.local(MN), Endpoint.multicast(dsts, layout))
+
+
+def replica_weight_broadcast(params, *, scheduler, src: Optional[str] = None,
+                             replicas: Optional[Sequence[str]] = None,
+                             label: str = "weights"):
+    """Distribute one parameter pytree to every serving replica through the
+    multicast plane: one tree-routed descriptor per weight matrix
+    (:meth:`~repro.runtime.DistributedScheduler.submit_multicast`), so a
+    link feeding several replicas carries each matrix once — replica scale-up
+    stops costing N unicast copies of the model.
+
+    ``src`` defaults to the fabric's first node, ``replicas`` to every other
+    node.  Returns ``{replica: params}`` with each matrix leaf bit-identical
+    to the source; non-matrix leaves are shared as-is.
+    """
+    topo = scheduler.topology
+    nodes = list(topo.nodes)
+    if src is None:
+        src = nodes[0]
+    if replicas is None:
+        replicas = [n for n in nodes if n != src]
+    replicas = list(replicas)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    futs = {}
+    for i, leaf in enumerate(leaves):
+        if getattr(leaf, "ndim", 0) < 2:
+            continue
+        mat = leaf if leaf.ndim == 2 else leaf.reshape(-1, leaf.shape[-1])
+        futs[i] = scheduler.submit_multicast(
+            mat, _fanout_desc(tuple(replicas), MN), src=src,
+            label=f"{label}[{i}]")
+    scheduler.flush()
+    out = {}
+    for node in replicas:
+        rleaves = list(leaves)
+        for i, f in futs.items():
+            rleaves[i] = f.result_at(node).reshape(leaves[i].shape)
+        out[node] = jax.tree_util.tree_unflatten(treedef, rleaves)
+    return out
+
+
+def prefix_cache_fanout(pages: jnp.ndarray, *, scheduler,
+                        src: Optional[str] = None,
+                        dsts: Optional[Sequence[str]] = None,
+                        layout="auto", label: str = "prefix"):
+    """Fan one shared prompt prefix's KV pages out to every decode replica
+    as a single multicast tree.  Each destination's at-rest layout may be
+    ``"auto"`` (the default): it resolves *independently* against that
+    destination's routed delivery link, so a wide-link replica can land
+    tiled while a narrow-link one lands row-major — same tree, per-leaf
+    layouts.  Returns the :class:`~repro.runtime.MulticastFuture`;
+    ``result_at(dst)`` is the delivered page stack and
+    ``dst_descriptors()`` shows how each ``auto`` resolved.
+    """
+    topo = scheduler.topology
+    nodes = list(topo.nodes)
+    if src is None:
+        src = nodes[0]
+    if dsts is None:
+        dsts = [n for n in nodes if n != src]
+    mat = pages if pages.ndim == 2 else pages.reshape(-1, pages.shape[-1])
+    desc = _fanout_desc(tuple(dsts), layout)
+    fut = scheduler.submit_multicast(mat, desc, src=src, label=label)
+    scheduler.flush()
+    return fut
+
+
 @functools.lru_cache(maxsize=None)
 def _tunnel_desc(axis_name: str, perm: Tuple[Tuple[int, int], ...],
                  transpose: bool, d_buf: int):

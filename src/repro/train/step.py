@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import MN, Endpoint, describe
 from repro.core import api as xdma
 from repro.core.descriptor import reduce_descriptor
 from repro.models import lm
@@ -76,6 +77,51 @@ def dp_grad_sync(grads, axis: str, axis_size: int, *, compressed: bool = True,
         outs = [f.result() for f in futs]
     outs = [g / axis_size for g in outs]
     return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+@functools.lru_cache(maxsize=None)
+def _bcast_desc(dsts: tuple) -> Any:
+    return describe(Endpoint.local(MN), Endpoint.multicast(dsts))
+
+
+def dp_param_broadcast(params, *, scheduler, src: Optional[str] = None,
+                       replicas=None, label: str = "dp_bcast"):
+    """Broadcast a parameter pytree from the primary data-parallel replica
+    to every peer through the movement plane: one *multicast* descriptor
+    per matrix leaf, tree-routed over the scheduler's fabric
+    (:meth:`~repro.runtime.DistributedScheduler.submit_multicast`), so a
+    hop shared by several replicas carries each weight once instead of
+    once per replica — the N-unicast DP broadcast collapsed into one tree.
+
+    ``src`` defaults to the fabric's first node and ``replicas`` to every
+    other node.  Non-matrix leaves (scalars, step counters) replicate
+    outside the plane.  Returns the per-replica parameter pytrees in
+    ``replicas`` order, each leaf bit-identical to the source.
+    """
+    topo = scheduler.topology
+    nodes = list(topo.nodes)
+    if src is None:
+        src = nodes[0]
+    if replicas is None:
+        replicas = [n for n in nodes if n != src]
+    replicas = list(replicas)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    futs = {}
+    for i, leaf in enumerate(leaves):
+        if getattr(leaf, "ndim", 0) < 2:
+            continue                      # counters ride outside the plane
+        mat = leaf if leaf.ndim == 2 else leaf.reshape(-1, leaf.shape[-1])
+        futs[i] = scheduler.submit_multicast(
+            mat, _bcast_desc(tuple(replicas)), src=src,
+            label=f"{label}[{i}]")
+    scheduler.flush()
+    out = []
+    for node in replicas:
+        rleaves = list(leaves)
+        for i, f in futs.items():
+            rleaves[i] = f.result_at(node).reshape(leaves[i].shape)
+        out.append(jax.tree_util.tree_unflatten(treedef, rleaves))
+    return out
 
 
 def make_dp_train_step(cfg: ModelConfig, shape: ShapeConfig,

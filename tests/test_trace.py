@@ -286,7 +286,7 @@ with capture(name='moe') as tr:
         y_ep, aux = jax.jit(lambda xx: MOE.moe_apply(cfg2, p, xx, mesh=mesh))(x)
 kinds = tr.by_endpoint()
 assert kinds.get('all_to_all', 0) >= 2, kinds      # dispatch + return
-assert kinds.get('peer', 0) >= 3, kinds            # ring all-gather hops
+assert kinds.get('multicast', 0) >= 3, kinds       # ring all-gather hops
 assert kinds.get('reduce', 0) >= 1, kinds          # aux pmean
 assert_all_in_plane()
 
